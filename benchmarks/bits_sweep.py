@@ -1,0 +1,75 @@
+"""Accuracy-vs-bits ablation (the paper's Table II accuracy axis).
+
+Trains one small ViT per bit width with the paper's QAT recipe on the
+synthetic CIFAR-style task, then post-integerizes — reproducing the paper's
+qualitative result: accuracy tracks the QAT model at every width, and the
+drop from integerization itself is ~0 (reordering is exact).
+Run standalone: PYTHONPATH=src python -m benchmarks.bits_sweep --steps 80
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def run(steps=80, widths=(2, 3, 4, 8)):
+    import jax
+    from examples.train_cifar_qat import evaluate  # noqa
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from repro.core.api import QuantConfig, integerize_params
+    from repro.data.synthetic import image_batch
+    from repro.models import vit
+    from repro.optim import OptConfig, init_opt_state, opt_update
+    import jax.numpy as jnp
+
+    rows = []
+    for bits in widths:
+        cfg_f = vit.ViTConfig(name=f"sweep{bits}", n_layers=3, d_model=96,
+                              n_heads=4, d_ff=192, img_size=32, patch=4,
+                              dtype="float32")
+        qc = QuantConfig(w_bits=bits, a_bits=bits, attn_bits=min(bits, 7),
+                         mode="fake")
+        cfg_q = cfg_f.replace(quant=qc)
+        ocfg = OptConfig(kind="lamb", lr=5e-4, warmup_steps=8,
+                         total_steps=steps)
+        params = vit.init_params(jax.random.PRNGKey(0), cfg_f)
+        opt = init_opt_state(params)
+
+        @jax.jit
+        def step(params, opt, batch):
+            (l, m), g = jax.value_and_grad(
+                lambda p: vit.loss_fn(p, batch, cfg_q), has_aux=True)(params)
+            params, opt, _ = opt_update(params, g, opt, ocfg)
+            return params, opt, l
+
+        for i in range(steps):
+            params, opt, _ = step(params, opt,
+                                  image_batch(i, batch=64, img=32))
+
+        def _eval(p, cfg, n=6):
+            accs = []
+            for i in range(n):
+                b = image_batch(5000 + i, batch=64, img=32)
+                lg = vit.forward(p, b["images"], cfg)
+                accs.append(float(jnp.mean(
+                    (jnp.argmax(lg, -1) == b["labels"]).astype(jnp.float32))))
+            return sum(accs) / len(accs)
+
+        acc_qat = _eval(params, cfg_q)
+        ip = integerize_params(params, qc.replace(mode="int"))
+        acc_int = _eval(ip, cfg_f.replace(quant=qc.replace(mode="int")))
+        rows.append((bits, acc_qat, acc_int))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args(argv)
+    print("bits,acc_qat,acc_integerized,delta")
+    for bits, a, b in run(args.steps):
+        print(f"{bits},{a:.3f},{b:.3f},{b - a:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

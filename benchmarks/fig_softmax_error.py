@@ -1,0 +1,46 @@
+"""Eq. 4 validation: base-2 shift-exp / embedded-softmax approximation error
+across logit spreads and prob bit widths (the paper's accuracy-cost knob)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softmax2 import exp2_shift, softmax2, softmax_ref
+
+
+def run():
+    rows = []
+    x = jnp.linspace(-30, 30, 200_001)
+    rel = jnp.abs(exp2_shift(x) - jnp.exp2(x)) / jnp.exp2(x)
+    rows.append(("exp2_shift_max_rel_err", float(jnp.max(rel))))
+    rows.append(("exp2_shift_mean_rel_err", float(jnp.mean(rel))))
+
+    key = jax.random.PRNGKey(0)
+    for spread in (1.0, 3.0, 8.0):
+        l = jax.random.normal(key, (64, 256)) * spread
+        err = jnp.max(jnp.abs(softmax2(l) - softmax_ref(l)))
+        rows.append((f"softmax2_maxerr_spread{spread}", float(err)))
+
+    # Attention-output error vs prob quantization bits (paper's 2/3-bit).
+    from repro.core.api import QuantConfig
+    from repro.layers.attention import AttnSpec, attention
+    q = jax.random.normal(key, (1, 4, 64, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 64, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 4, 64, 32))
+    ref = attention(q, k, v, AttnSpec(q_chunk=64))
+    scale = float(jnp.max(jnp.abs(ref)))
+    for bits in (2, 3, 4, 7):
+        qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=bits, mode="int")
+        out = attention(q, k, v, AttnSpec(q_chunk=64), qc)
+        rows.append((f"attn_out_rel_err_{bits}b_probs",
+                     float(jnp.max(jnp.abs(out - ref))) / scale))
+    return rows
+
+
+def main():
+    for name, val in run():
+        print(f"{name},{val:.6f}")
+
+
+if __name__ == "__main__":
+    main()

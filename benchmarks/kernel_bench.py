@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks.
+
+CPU container: wall-clock of the XLA integer paths (relative CPU numbers,
+useful for regression tracking) plus the ANALYTIC v5e roofline time per
+kernel call (bytes & MACs are exact functions of shape — this is the number
+that matters for the TPU target).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.integerize import int_linear, make_qlinear
+from repro.kernels import ref as kref
+
+PEAK_INT8 = 394e12
+PEAK_BF16 = 197e12
+HBM = 819e9
+
+
+def _time(f, *args, n=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def qmatmul_analytic(m, n, k, w_bits=8):
+    macs = m * n * k
+    bytes_ = m * k + n * k * (w_bits / 8) + m * n * 4
+    return {"t_compute_us": macs * 2 / PEAK_INT8 * 1e6,
+            "t_memory_us": bytes_ / HBM * 1e6}
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # Reordered integer linear vs float linear (XLA paths, CPU).
+    for m, n, k in [(256, 1024, 1024), (1024, 4096, 4096)]:
+        x = jax.random.normal(key, (m, k))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.02
+        p = make_qlinear(w.T, None, 8)
+        xq = quant.quantize_tensor(x, 8)
+        f_int = jax.jit(lambda xq, p: int_linear(xq, p))
+        f_fp = jax.jit(lambda x, w: x @ w)
+        us_int = _time(f_int, xq, p)
+        us_fp = _time(f_fp, x, w)
+        ana = qmatmul_analytic(m, n, k)
+        rows.append((f"int_linear_{m}x{n}x{k}", us_int,
+                     f"fp32={us_fp:.0f}us v5e_compute={ana['t_compute_us']:.1f}us "
+                     f"v5e_mem={ana['t_memory_us']:.1f}us"))
+
+    # pq-layernorm fused vs LN-then-quant (XLA, CPU).
+    x = jax.random.normal(key, (4096, 1024))
+    g = jnp.ones((1024,))
+    b = jnp.zeros((1024,))
+    f_fused = jax.jit(lambda x: kref.pq_layernorm_ref(x, g, b, 0.05, bits=4))
+    us_ln = _time(f_fused, x)
+    rows.append(("pq_layernorm_4096x1024", us_ln,
+                 f"v5e_mem={(x.size * 4 + x.size) / HBM * 1e6:.1f}us"))
+
+    # int attention (XLA ref path).
+    h, s, d = 4, 1024, 64
+    qq = jax.random.randint(key, (h, s, d), -8, 8).astype(jnp.int8)
+    f_attn = jax.jit(lambda q: kref.int_attention_ref(q, q, q, 0.002, 0.01))
+    us_attn = _time(f_attn, qq, n=5)
+    macs = 2 * h * s * s * d
+    rows.append((f"int_attention_h{h}_s{s}", us_attn,
+                 f"v5e_compute={macs * 2 / PEAK_INT8 * 1e6:.1f}us"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

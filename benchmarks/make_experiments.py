@@ -1,0 +1,111 @@
+"""Render EXPERIMENTS.md from dry-run results + the perf-iteration log."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import cell_rows  # noqa: E402
+
+HC = [("qwen2.5-32b", "prefill_32k"),
+      ("llama4-scout-17b-a16e", "train_4k"),
+      ("yi-34b", "decode_32k")]
+
+
+def fmt_s(x):
+    return f"{x:.4g}"
+
+
+def roofline_md(rows):
+    out = ["| arch | shape | compute_s | memory_s | collective_s | "
+           "bottleneck | roofline_frac | useful_ratio | args_GB | temp_GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip: {r.get('note', '')[:60]} | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck'].replace('_s', '')} | "
+            f"{r['roofline_fraction']} | {r['useful_ratio']} | "
+            f"{r['mem_args_gb']} | {r['mem_temp_gb']} |")
+    return "\n".join(out)
+
+
+def dryrun_md(results, mesh):
+    out = ["| arch | shape | status | per-chip FLOPs | args GB | temp GB | "
+           "collectives (GB, trip-scaled) |", "|---|---|---|---|---|---|---|"]
+    for key, rec in sorted(results.items()):
+        arch, shape, m = key.split("|")
+        if m != mesh:
+            continue
+        if rec["status"] != "ok":
+            out.append(f"| {arch} | {shape} | {rec['status']} | | | | "
+                       f"{rec.get('reason', '')[:70]} |")
+            continue
+        coll = rec.get("collectives_scaled", {})
+        cstr = ", ".join(f"{k}:{v/2**30:.1f}" for k, v in sorted(coll.items())
+                         if v > 2 ** 20) or "~0"
+        mem = rec["memory"]
+        flops = rec.get("cost_unrolled", {}).get("flops", 0) / \
+            (256 if mesh == "single" else 512)
+        out.append(
+            f"| {arch} | {shape} | ok | {flops:.3g} | "
+            f"{mem.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+            f"{mem.get('temp_size_in_bytes', 0)/2**30:.2f} | {cstr} |")
+    return "\n".join(out)
+
+
+def hillclimb_md(base_rows, opt_rows):
+    def find(rows, arch, shape):
+        return next(r for r in rows if r["arch"] == arch
+                    and r["shape"] == shape)
+
+    out = ["| cell | metric | paper-faithful baseline | optimized | delta |",
+           "|---|---|---|---|---|"]
+    for arch, shape in HC:
+        b = find(base_rows, arch, shape)
+        o = find(opt_rows, arch, shape)
+        for metric in ("compute_s", "memory_s", "collective_s"):
+            bv, ov = b[metric], o[metric]
+            d = (ov - bv) / bv * 100 if bv else 0.0
+            out.append(f"| {arch} x {shape} | {metric} | {fmt_s(bv)} | "
+                       f"{fmt_s(ov)} | {d:+.1f}% |")
+        blb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        olb = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        out.append(f"| {arch} x {shape} | step lower bound | {fmt_s(blb)} | "
+                   f"{fmt_s(olb)} | {(olb-blb)/blb*100:+.1f}% |")
+        out.append(f"| {arch} x {shape} | roofline fraction | "
+                   f"{b['roofline_fraction']} | {o['roofline_fraction']} | |")
+    return "\n".join(out)
+
+
+def main():
+    with open("results/dryrun.json") as f:
+        base = json.load(f)
+    with open("results/dryrun_opt.json") as f:
+        opt = json.load(f)
+    base_rows = {m: cell_rows(base, m) for m in ("single", "multi")}
+    opt_rows = {m: cell_rows(opt, m) for m in ("single", "multi")}
+
+    with open("EXPERIMENTS.template.md") as f:
+        template = f.read()
+    doc = template
+    doc = doc.replace("{{DRYRUN_SINGLE}}", dryrun_md(base, "single"))
+    doc = doc.replace("{{DRYRUN_MULTI}}", dryrun_md(base, "multi"))
+    doc = doc.replace("{{ROOFLINE_BASE}}", roofline_md(base_rows["single"]))
+    doc = doc.replace("{{ROOFLINE_OPT}}", roofline_md(opt_rows["single"]))
+    doc = doc.replace("{{HILLCLIMB}}",
+                      hillclimb_md(base_rows["single"], opt_rows["single"]))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run.
+
+Reads results/dryrun.json (produced by repro.launch.dryrun), adds
+MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) and the
+useful-compute ratio, and emits CSV or the EXPERIMENTS.md markdown table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.registry import SHAPES, get_config, is_encdec
+from repro.launch import hlo_analysis
+
+
+def param_counts(arch: str) -> tuple[float, float]:
+    """(total, active) non-embedding params from the real param tree."""
+    cfg = get_config(arch)
+    from repro.models import encdec, lm
+    init = encdec.init_params if is_encdec(cfg) else lm.init_params
+    tree = jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
+    total = active = 0.0
+    moe = getattr(cfg, "moe", None)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = jax.tree_util.keystr(path)
+        if "embed" in name:
+            continue                      # lookup, not matmul
+        n = float(leaf.size)
+        total += n
+        if "experts_" in name and moe is not None:
+            active += n * moe.top_k / moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def cell_rows(results: dict, mesh_filter: str = "single") -> list[dict]:
+    rows = []
+    chips = {"single": 256, "multi": 512}
+    for key, rec in sorted(results.items()):
+        arch, shape, mesh = key.split("|")
+        if mesh != mesh_filter:
+            continue
+        row = {"arch": arch, "shape": shape, "mesh": mesh,
+               "status": rec["status"]}
+        if rec["status"] != "ok":
+            row["note"] = rec.get("reason", rec.get("error", ""))[:80]
+            rows.append(row)
+            continue
+        seq, gb, kind = SHAPES[shape]
+        cost = rec["cost"]
+        # Per-chip FLOPs: unrolled whole-program count / chips (HLO while
+        # bodies are otherwise tallied once; see scan_util docstring).
+        flops_global = rec.get("cost_unrolled", {}).get("flops",
+                                                        cost.get("flops", 0.))
+        flops = flops_global / chips[mesh]
+        # HBM traffic: compiled per-device 'bytes accessed' undercounts loop
+        # bodies; floor it with one pass over args+outputs+activation churn.
+        mem = rec["memory"]
+        analytic_floor = (mem.get("argument_size_in_bytes", 0)
+                          + mem.get("output_size_in_bytes", 0)
+                          - mem.get("alias_size_in_bytes", 0)  # donated
+                          + 2 * mem.get("temp_size_in_bytes", 0))
+        bytes_ = max(cost.get("bytes accessed", 0.0), float(analytic_floor))
+        coll = sum(rec.get("collectives_scaled",
+                           rec.get("collectives", {})).values())
+        int8_frac = 1.0 if kind != "train" else 0.0
+        terms = hlo_analysis.roofline_terms(flops, bytes_, coll,
+                                            int8_frac=int8_frac)
+        total, active = param_counts(arch)
+        tokens = gb * (seq if kind != "decode" else 1)
+        factor = 6.0 if kind == "train" else 2.0
+        model_flops = factor * active * tokens / chips[mesh]
+        row.update(
+            flops=flops, bytes=bytes_, coll_bytes=coll,
+            compute_s=terms["compute_s"], memory_s=terms["memory_s"],
+            collective_s=terms["collective_s"],
+            bottleneck=terms["bottleneck"],
+            roofline_fraction=round(terms["roofline_fraction"], 3),
+            model_flops=model_flops,
+            useful_ratio=round(model_flops / flops, 3) if flops else 0.0,
+            flops_global=flops_global,
+            mem_temp_gb=round(rec["memory"].get("temp_size_in_bytes", 0)
+                              / 2 ** 30, 2),
+            mem_args_gb=round(rec["memory"].get("argument_size_in_bytes", 0)
+                              / 2 ** 30, 2),
+        )
+        rows.append(row)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    with open(args.results) as f:
+        results = json.load(f)
+    rows = cell_rows(results, args.mesh)
+    if args.markdown:
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "bottleneck | roofline_frac | useful_ratio | args_GB | temp_GB |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"{r['status']}: {r.get('note', '')} | | | | |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+                  f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+                  f"{r['bottleneck'].replace('_s', '')} | "
+                  f"{r['roofline_fraction']} | {r['useful_ratio']} | "
+                  f"{r['mem_args_gb']} | {r['mem_temp_gb']} |")
+    else:
+        cols = ("arch", "shape", "compute_s", "memory_s", "collective_s",
+                "bottleneck", "roofline_fraction", "useful_ratio")
+        print(",".join(cols))
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['arch']},{r['shape']},{r['status']}")
+                continue
+            print(",".join(str(r.get(c, "")) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

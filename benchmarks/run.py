@@ -1,0 +1,33 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (kernel bench) plus the
+table reproductions and the roofline summary.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (fig_softmax_error, kernel_bench, table1_power,
+                            table2_comparison)
+    print("== Table I: per-block PE/MAC counts + energy model ==")
+    table1_power.main()
+    print("\n== Table II: size / OPs / multiplier comparison ==")
+    table2_comparison.main()
+    print("\n== Eq.4 softmax approximation error ==")
+    fig_softmax_error.main()
+    print("\n== Kernel micro-bench (name,us_per_call,derived) ==")
+    kernel_bench.main()
+    res = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+    if os.path.exists(res):
+        print("\n== Roofline summary (single-pod) ==")
+        from benchmarks import roofline
+        roofline.main(["--results", res, "--mesh", "single"])
+
+
+if __name__ == '__main__':
+    main()

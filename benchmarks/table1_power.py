@@ -1,0 +1,92 @@
+"""Paper Table I reproduction: per-block PE/MAC counts + energy model.
+
+The paper synthesizes a 3-bit self-attention module for DeiT-S on a Spartan-7
+FPGA and reports per-block power.  Without hardware we reproduce (a) the
+exact PE and MAC counts of every block — these are analytic functions of
+(N=198, d=384, head_dim=64) and must match the paper's numbers — and (b) a
+per-PE energy model (Horowitz-style pJ/op scaling: multiplier energy ~ b^2,
+adder ~ b) that reproduces the paper's qualitative result: integer matmul
+blocks burn far less per PE than the full-precision comparator/norm blocks.
+"""
+from __future__ import annotations
+
+N_TOK = 198          # 196 patches + cls + distill
+D_MODEL = 384
+HEAD_DIM = 64
+
+# Energy per op (pJ), 45nm-class numbers scaled by bit width.
+E_MULT_FP32 = 3.7
+E_ADD_FP32 = 0.9
+
+
+def e_mac_int(bits: int) -> float:
+    """int multiplier ~ b^2 (vs 24^2 mantissa for fp32), adder ~ b."""
+    return E_MULT_FP32 * (bits / 24) ** 2 + E_ADD_FP32 * (bits / 32)
+
+
+def blocks(bits: int = 3):
+    """Block table mirroring Table I (per attention head where the paper's
+    PE counts are per head)."""
+    n, d, hd = N_TOK, D_MODEL, HEAD_DIM
+    rows = []
+
+    def add(name, pes, macs, kind):
+        e = e_mac_int(bits) if kind == "int" else (E_MULT_FP32 + E_ADD_FP32)
+        rows.append({
+            "block": name, "n_pe": pes, "mac_m": macs / 1e6,
+            "kind": kind, "pj_per_op": round(e, 3),
+            # relative per-PE power proxy: ops-per-PE * energy (f=const)
+            "per_pe_power": round((macs / max(pes, 1)) * e / 1e3, 3),
+        })
+
+    for proj in ("Q", "K", "V"):
+        add(f"{proj} linear", d * hd, n * d * hd, "int")
+    add("LayerNorm", 2 * hd, n * hd, "float")
+    add("QK^T matmul+softmax", n * n, n * n * hd, "int")
+    add("PV matmul", n * hd, n * n * hd, "int")
+    add("reversing/delay", n * hd, 0, "float")
+    return rows
+
+
+PAPER_TABLE1 = {  # (n_pe, mac_m) from the paper
+    "Q linear": (24576, 4.87),
+    "K linear": (24576, 4.87),
+    "V linear": (24576, 4.87),
+    "QK^T matmul+softmax": (39204, 2.51),
+    "PV matmul": (12672, 2.51),
+}
+
+
+def run():
+    rows = blocks(3)
+    out = []
+    for r in rows:
+        ref = PAPER_TABLE1.get(r["block"])
+        match = ""
+        if ref:
+            pe_ok = r["n_pe"] == ref[0]
+            mac_ok = abs(r["mac_m"] - ref[1]) < 0.02
+            match = "MATCH" if (pe_ok and mac_ok) else \
+                f"MISMATCH(paper={ref})"
+        out.append((r, match))
+    # Key qualitative claim: int matmul per-PE power < float blocks per-PE.
+    int_pe = [r["per_pe_power"] for r, _ in out if r["kind"] == "int"
+              and r["mac_m"] > 0]
+    fp_blocks = [r for r, _ in out if r["kind"] == "float" and r["mac_m"] > 0]
+    claim = all(i < (r["mac_m"] * 1e6 / max(r["n_pe"], 1))
+                * (E_MULT_FP32 + E_ADD_FP32) / 1e3
+                for i in int_pe for r in fp_blocks) if fp_blocks else True
+    return out, claim
+
+
+def main():
+    out, claim = run()
+    print("block,n_pe,mac_M,kind,pj_per_op,per_pe_power_rel,paper_check")
+    for r, match in out:
+        print(f"{r['block']},{r['n_pe']},{r['mac_m']:.2f},{r['kind']},"
+              f"{r['pj_per_op']},{r['per_pe_power']},{match}")
+    print(f"claim_int_matmul_cheaper_per_pe,{claim}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production-mesh launch walk-through: lower+compile one cell on the
+2x16x16 multi-pod mesh and print its memory/cost/collective analysis.
+
+This is the same code path a real launcher would drive per pod; on hardware
+the only change is dropping the host-platform device-count override.
+
+Run:  python examples/multipod_launch.py --arch chatglm3-6b --shape train_4k
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import json
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multi", choices=["single", "multi"])
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(args.arch, args.shape, args.mesh)
+    rec.pop("trace", None)
+    print(json.dumps(rec, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serve the FULL-SIZE mamba2-130m (real assigned config, ~130M params)
+with batched requests, integerized: 4-bit weights, int8 activations, integer
+matmuls with reordered dequantization.  Demonstrates the framework's serving
+path at a real model scale on CPU.
+
+Run:  PYTHONPATH=src python examples/serve_mamba130m.py --gen 12 --batch 4
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.core.api import QuantConfig, integerize_params, model_bytes
+from repro.models import lm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--wbits", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get_config("mamba2-130m").replace(dtype="float32", remat=False)
+    key = jax.random.PRNGKey(0)
+    print("initializing mamba2-130m ...")
+    params = lm.init_params(key, cfg)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    qc = QuantConfig(w_bits=args.wbits, a_bits=8, attn_bits=7, mode="int")
+    iparams = integerize_params(params, qc)
+    cfg_i = cfg.replace(quant=qc)
+    print(f"params: {n/1e6:.0f}M | storage: {model_bytes(params, None)/1e6:.0f} MB float "
+          f"-> {model_bytes(iparams, qc)/1e6:.0f} MB integerized")
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab).astype(jnp.int32)
+    prefill = jax.jit(lambda p, t: lm.prefill(p, {"tokens": t}, cfg_i,
+                                              max_len=args.prompt_len))
+    decode = jax.jit(lambda p, t, c: lm.decode_step(p, t, c, cfg_i))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(iparams, prompts)
+    logits.block_until_ready()
+    print(f"prefill({args.batch}x{args.prompt_len}): "
+          f"{time.perf_counter()-t0:.1f}s (includes compile)")
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = []
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        outs.append(tok)
+        logits, cache = decode(iparams, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    print(f"decode: {args.gen} tokens x {args.batch} reqs in {dt:.1f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s on 1 CPU core; "
+          f"SSM state instead of KV cache)")
+    print("sample continuation:", [int(t[0, 0]) for t in outs])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.registry import get_config, smoke_config, ARCHS

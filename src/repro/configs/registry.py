@@ -1,0 +1,99 @@
+"""Architecture registry + assigned input shapes + abstract input specs.
+
+Every (arch x shape) cell in the assignment maps to a concrete step
+function and a pytree of ShapeDtypeStructs, so the dry-run can lower and
+compile without allocating anything.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+ARCHS = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "chatglm3-6b": "chatglm3_6b",
+    "yi-34b": "yi_34b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "internvl2-26b": "internvl2_26b",
+    "mamba2-130m": "mamba2_130m",
+    "whisper-large-v3": "whisper_large_v3",
+    "deit-s": "deit_s",
+}
+
+# Assigned shape sets: (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# Sub-quadratic attention requirement: long_500k runs only on SSM/hybrid.
+LONG_OK = {"recurrentgemma-9b", "mamba2-130m"}
+
+
+def get_config(arch: str):
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}").CONFIG
+
+
+def smoke_config(arch: str):
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}").SMOKE
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return False, "needs sub-quadratic attention (full-attn arch; skip per DESIGN.md)"
+    if arch == "deit-s" and shape != "train_4k":
+        return False, "paper's own encoder-only arch (bench'd separately)"
+    return True, ""
+
+
+def is_encdec(cfg) -> bool:
+    return hasattr(cfg, "n_enc_layers")
+
+
+def input_specs(arch: str, shape: str, cfg=None):
+    """Returns (kind, batch_specs) — abstract inputs for the step function.
+
+    kind in {"train", "prefill", "decode"}; decode specs include the
+    abstract cache (built by the caller via eval_shape, since it depends on
+    quant mode).
+    """
+    cfg = cfg or get_config(arch)
+    seq, gb, kind = SHAPES[shape]
+    i32 = jnp.int32
+
+    if is_encdec(cfg):
+        frames = jax.ShapeDtypeStruct((gb, cfg.n_audio_ctx, cfg.d_model),
+                                      jnp.float32)
+        if kind == "train":
+            return kind, {"frames": frames,
+                          "tokens": jax.ShapeDtypeStruct((gb, seq), i32),
+                          "labels": jax.ShapeDtypeStruct((gb, seq), i32)}
+        if kind == "prefill":
+            return kind, {"frames": frames,
+                          "tokens": jax.ShapeDtypeStruct((gb, seq), i32)}
+        return kind, {"token": jax.ShapeDtypeStruct((gb, 1), i32)}
+
+    if kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((gb, seq), i32),
+                 "labels": jax.ShapeDtypeStruct((gb, seq), i32)}
+        if cfg.frontend == "patch":
+            specs["tokens"] = jax.ShapeDtypeStruct((gb, seq - cfg.n_patches), i32)
+            specs["labels"] = specs["tokens"]
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (gb, cfg.n_patches, cfg.d_model), jnp.float32)
+        return kind, specs
+    if kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((gb, seq), i32)}
+        if cfg.frontend == "patch":
+            specs["tokens"] = jax.ShapeDtypeStruct((gb, seq - cfg.n_patches), i32)
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (gb, cfg.n_patches, cfg.d_model), jnp.float32)
+        return kind, specs
+    return kind, {"token": jax.ShapeDtypeStruct((gb, 1), i32)}

@@ -1,0 +1,13 @@
+"""Whisper-large-v3 backbone: 32 enc + 32 dec layers, d=1280, 20H MHA;
+conv/mel frontend is a STUB (input_specs provides frame embeddings)
+[arXiv:2212.04356]."""
+from repro.models.encdec import EncDecConfig
+
+CONFIG = EncDecConfig(
+    name="whisper-large-v3", n_enc_layers=32, n_dec_layers=32, d_model=1280,
+    n_heads=20, d_ff=5120, vocab=51866, n_audio_ctx=1500)
+
+SMOKE = EncDecConfig(
+    name="whisper-smoke", n_enc_layers=2, n_dec_layers=2, d_model=64,
+    n_heads=4, d_ff=128, vocab=256, n_audio_ctx=16, dtype="float32",
+    q_chunk=16, remat=False)

@@ -1,0 +1,13 @@
+"""Core contribution of the paper: low-bit integerization by operand reordering."""
+from repro.core.api import (FLOAT, QuantConfig, dense, dense_q,
+                            integerize_params, count_params, model_bytes)
+from repro.core.quant import (QTensor, absmax_scale, dequantize, fake_quant,
+                              pack_int4, quantize, quantize_tensor, qrange,
+                              unpack_int4)
+from repro.core.integerize import (QLinearParams, int_linear, int_matmul,
+                                   int_matmul_transposed, make_qlinear,
+                                   quantize_weight, dequant_linear_ref)
+from repro.core.softmax2 import (exp2_shift, exp_shift, softmax2, softmax_ref,
+                                 quantize_probs, quantize_probs_comparator)
+from repro.core.pqln import (moments_twopass, moments_welford, pq_layernorm,
+                             pq_layernorm_comparator, pq_rmsnorm, rmsnorm)

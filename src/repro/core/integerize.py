@@ -1,0 +1,111 @@
+"""Operand-reordered integer linear algebra (paper Eq. 1-2).
+
+The quantized linear layer
+
+    Y = [Xq diag(dx)] [Wq diag(dw)]^T + b                      (Eq. 1)
+
+commutes (after coarsening the per-channel input scale dx to a per-tensor
+``dx_bar``) to
+
+    Y = [Xq Wq^T + b / (dx_bar * dw)] * dx_bar * diag(dw)      (Eq. 2)
+
+so the O(N^3) contraction runs on integer operands and only an O(N^2)
+per-output-channel scale (plus bias fold) remains.  When the consumer is a
+LayerNorm/RMSNorm the per-tensor factor ``dx_bar`` cancels entirely and
+``diag(dw)`` folds into the norm's gamma (see :mod:`repro.core.pqln`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import ACC_DTYPE, QTensor
+
+
+class QLinearParams(NamedTuple):
+    """Serving-time parameters of one integerized linear layer."""
+    w_q: jax.Array                 # (out, in) int8 codes (row-major: y = x @ w_q.T)
+    w_scale: jax.Array             # (out,) per-output-channel dw
+    bias: Optional[jax.Array]      # (out,) original float bias (b), or None
+    w_bits: int = 8                # static
+
+
+def quantize_weight(w: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric quantization of a (out, in) weight."""
+    dw = quant.absmax_scale(w, bits, axis=1)          # (out, 1)
+    wq = quant.quantize(w, dw, bits)
+    return wq, dw[:, 0]
+
+
+def make_qlinear(w: jax.Array, bias: Optional[jax.Array], bits: int) -> QLinearParams:
+    wq, dw = quantize_weight(w, bits)
+    return QLinearParams(w_q=wq, w_scale=dw, bias=bias, w_bits=bits)
+
+
+def int_linear(x: QTensor, p: QLinearParams, *,
+               apply_input_scale: bool = True) -> jax.Array:
+    """Eq. 2: integer contraction then fused dequant epilogue.
+
+    Returns float activations ``(Xq Wq^T) * dx_bar * dw + b``.  With
+    ``apply_input_scale=False`` the per-tensor ``dx_bar`` is left for the
+    consumer to absorb (LayerNorm / softmax-scale folding).
+    """
+    acc = jnp.matmul(x.q, p.w_q.T, preferred_element_type=ACC_DTYPE)
+    post = p.w_scale * (x.scale if apply_input_scale else 1.0)
+    y = acc.astype(post.dtype) * post
+    if p.bias is not None:
+        b = p.bias if apply_input_scale else p.bias / x.scale
+        y = y + b
+    return y
+
+
+def int_linear_requant(x: QTensor, p: QLinearParams, out_bits: int,
+                       out_scale: jax.Array) -> QTensor:
+    """Integer linear followed by re-quantization to the next block's grid.
+
+    This is the activation-to-activation path of Fig. 2: all scales collapse
+    into a single epilogue multiply feeding the quantizer.
+    """
+    y = int_linear(x, p)
+    return quant.quantize_tensor(y, out_bits, scale=out_scale)
+
+
+def int_matmul(a: QTensor, b: QTensor) -> jax.Array:
+    """Integer A @ B with both per-tensor scales applied post-hoc.
+
+    Used for Wattn @ V where the product feeds a quantizer that absorbs
+    ``a.scale * b.scale`` into its thresholds (paper §IV-B).
+    """
+    acc = jnp.matmul(a.q, b.q, preferred_element_type=ACC_DTYPE)
+    return acc.astype(a.scale.dtype) * (a.scale * b.scale)
+
+
+def int_matmul_transposed(a: QTensor, b: QTensor) -> jax.Array:
+    """Integer A @ B^T (QK^T form), scales applied post-hoc."""
+    acc = jnp.matmul(a.q, jnp.swapaxes(b.q, -1, -2),
+                     preferred_element_type=ACC_DTYPE)
+    return acc.astype(a.scale.dtype) * (a.scale * b.scale)
+
+
+def float_linear_ref(x: jax.Array, dx: jax.Array, p: QLinearParams) -> jax.Array:
+    """Eq. 1 oracle: dequantize-then-multiply (the Q-ViT inference path)."""
+    xq = quant.quantize(x, dx, 8)  # caller quantizes; here for completeness
+    del xq
+    raise NotImplementedError("use dequant_linear_ref with explicit codes")
+
+
+def dequant_linear_ref(x: QTensor, p: QLinearParams) -> jax.Array:
+    """Eq. 1 oracle on the same integer codes: dequantize both operands first.
+
+    Mathematically identical to :func:`int_linear`; the property test asserts
+    near-exact agreement (fp summation-order differences only).
+    """
+    xf = x.dequant()
+    wf = p.w_q.astype(jnp.float32) * p.w_scale[:, None]
+    y = xf @ wf.T
+    if p.bias is not None:
+        y = y + p.bias
+    return y

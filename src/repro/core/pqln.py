@@ -1,0 +1,135 @@
+"""Post-quantized LayerNorm (paper §IV-C, Fig. 5, Eq. 5).
+
+The LayerNorm that feeds a quantizer never needs a division or square root:
+
+    (x - mu)/sigma * gamma + beta > s_k
+        <=>  (x - mu) * gamma > (s_k - beta) * sigma
+        <=>  sign logic + comparison of squares      (Fig. 5b)
+
+and mu / sigma^2 come from single-pass incremental (Welford) statistics
+(Eq. 5), which map onto a systolic mu-row / sigma^2-row — or, on TPU, onto a
+single VMEM-resident reduction (see kernels/pq_layernorm).
+
+Scale folding (the "absorption trick"): when the producer left a per-tensor
+factor c and per-channel factor d unapplied (reordered linear, Eq. 2), then
+LayerNorm(c * x * d) == LayerNorm(x * d) exactly (row-affine invariance), so
+c = dx_bar vanishes; d folds by normalizing x*d directly, i.e. gamma cannot
+absorb it in general, so d stays an O(N^2) epilogue multiply — the fold we
+do take is c.  RMSNorm behaves identically for c.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class Moments(NamedTuple):
+    mean: jax.Array
+    var: jax.Array
+
+
+def moments_twopass(x: jax.Array, axis: int = -1) -> Moments:
+    """Vectorized reference statistics."""
+    mean = jnp.mean(x, axis=axis, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=axis, keepdims=True)
+    return Moments(mean, var)
+
+
+def moments_welford(x: jax.Array) -> Moments:
+    """Eq. 5 incremental statistics over the last axis via lax.scan.
+
+    mu_i    = mu_{i-1} + (x_i - mu_{i-1}) / i
+    M2_i    = M2_{i-1} + (x_i - mu_{i-1}) (x_i - mu_i)      (sigma^2 = M2/n)
+    """
+    n = x.shape[-1]
+    xt = jnp.moveaxis(x, -1, 0)  # (n, ...)
+
+    def step(carry, xi):
+        i, mu, m2 = carry
+        i = i + 1
+        d = xi - mu
+        mu = mu + d / i
+        m2 = m2 + d * (xi - mu)
+        return (i, mu, m2), None
+
+    init = (jnp.zeros((), x.dtype),
+            jnp.zeros(x.shape[:-1], x.dtype),
+            jnp.zeros(x.shape[:-1], x.dtype))
+    (_, mu, m2), _ = jax.lax.scan(step, init, xt)
+    return Moments(mu[..., None], (m2 / n)[..., None])
+
+
+def pq_layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, bits: int,
+                 delta_q: jax.Array, *, eps: float = 1e-6,
+                 pre_scale: jax.Array | None = None) -> jax.Array:
+    """LayerNorm -> quantize, the TPU-efficient (rsqrt) formulation.
+
+    ``pre_scale`` is the producer's unapplied per-channel diag(dw); the
+    per-tensor dx_bar needs no argument — it provably cancels (see module
+    docstring), which the caller exploits by simply not applying it.
+    Returns int8 codes on the signed b-bit grid with step ``delta_q``.
+    """
+    if pre_scale is not None:
+        x = x * pre_scale
+    mean, var = moments_twopass(x)
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return quant.quantize(y, delta_q, bits)
+
+
+def pq_layernorm_comparator(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                            bits: int, delta_q: jax.Array, *,
+                            eps: float = 1e-6,
+                            pre_scale: jax.Array | None = None) -> jax.Array:
+    """Fig. 5(b): division/sqrt-free comparator formulation (hardware model).
+
+    For each threshold s_k = (k - 1/2) delta_q decide
+
+        (x - mu) * gamma + beta * sigma > s_k * sigma
+
+    without sigma: let L = (x - mu) * gamma, R_k = (s_k - beta).  Then
+    L > R_k * sigma is decided by sign logic plus comparing L^2 vs R_k^2 *
+    sigma^2.  The quantized code is qmin + #{k : condition true}.
+    Exactly equal to :func:`pq_layernorm` away from threshold ties.
+    """
+    if pre_scale is not None:
+        x = x * pre_scale
+    mean, var = moments_twopass(x)
+    var = var + eps
+    qmin, qmax = quant.qrange(bits)
+    ks = jnp.arange(qmin + 1, qmax + 1, dtype=x.dtype)     # 2^b - 1 thresholds
+    s_k = (ks - 0.5) * delta_q
+    lhs = (x - mean) * gamma                                # (..., n)
+    lhs_e = lhs[..., None]                                  # (..., n, 1)
+    rhs_e = s_k - beta[..., None]                           # (..., n, K) via bcast
+    rhs_e = jnp.broadcast_to(rhs_e, lhs_e.shape[:-1] + (s_k.shape[0],))
+    # sign logic + squared comparison: decide lhs > rhs * sigma with sigma > 0
+    lhs_sq = jnp.square(lhs_e)
+    rhs_sq = jnp.square(rhs_e) * var[..., None]
+    cond = jnp.where(
+        rhs_e > 0,
+        (lhs_e > 0) & (lhs_sq > rhs_sq),    # both positive: compare squares
+        (lhs_e > 0) | (lhs_sq < rhs_sq),    # rhs <= 0: true unless lhs more negative
+    )
+    code = qmin + jnp.sum(cond, axis=-1)
+    return jnp.clip(code, qmin, qmax).astype(quant.STORAGE_DTYPE)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-6,
+            pre_scale: jax.Array | None = None) -> jax.Array:
+    """RMSNorm with the same per-tensor-scale cancellation property."""
+    if pre_scale is not None:
+        x = x * pre_scale
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gamma
+
+
+def pq_rmsnorm(x: jax.Array, gamma: jax.Array, bits: int, delta_q: jax.Array,
+               *, eps: float = 1e-6,
+               pre_scale: jax.Array | None = None) -> jax.Array:
+    """RMSNorm -> quantize (the LN-family norm used by the assigned archs)."""
+    return quant.quantize(rmsnorm(x, gamma, eps=eps, pre_scale=pre_scale),
+                          delta_q, bits)

@@ -1,0 +1,71 @@
+"""Deterministic synthetic data pipelines (offline container: no downloads).
+
+Token streams follow a Zipfian unigram mixed with a order-2 Markov structure
+so LM losses actually descend; image batches are class-conditional Gaussian
+blobs so classification accuracy is learnable (used by the CIFAR-style QAT
+example).  Pipelines are shard-aware: each (host, data-shard) slice draws a
+disjoint, restart-reproducible key stream — the property the checkpoint
+tests rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int = 32000
+    seq_len: int = 1024
+    global_batch: int = 8
+    seed: int = 0
+
+
+def _batch_key(seed: int, step: int, shard: int = 0):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), step), shard)
+
+
+def lm_batch(cfg: DataConfig, step: int, *, shard: int = 0, n_shards: int = 1):
+    """One (batch, seq) token batch + next-token labels for `step`."""
+    b = cfg.global_batch // n_shards
+    key = _batch_key(cfg.seed, step, shard)
+    k1, k2 = jax.random.split(key)
+    # Zipf-ish unigram via exponential transform of uniforms.
+    u = jax.random.uniform(k1, (b, cfg.seq_len + 1), minval=1e-6)
+    base = (jnp.exp(-4.0 * u) * cfg.vocab).astype(jnp.int32) % cfg.vocab
+    # Order-2 structure: every 3rd token is a deterministic mix.
+    idx = jnp.arange(cfg.seq_len + 1)
+    mixed = (base + jnp.roll(base, 1, -1) * 7 + jnp.roll(base, 2, -1) * 31) % cfg.vocab
+    toks = jnp.where(idx % 3 == 2, mixed, base)
+    noise = jax.random.bernoulli(k2, 0.05, toks.shape)
+    toks = jnp.where(noise, base, toks)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def image_batch(step: int, *, batch: int = 32, img: int = 32, classes: int = 10,
+                seed: int = 0, shard: int = 0):
+    """Class-conditional blobs: (B, img, img, 3) in [-1, 1] + labels."""
+    key = _batch_key(seed, step, shard)
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (batch,), 0, classes)
+    # Fixed per-class template (seeded independent of step).
+    tkey = jax.random.PRNGKey(seed + 7919)
+    templates = jax.random.normal(tkey, (classes, img, img, 3)) * 0.8
+    x = templates[labels] + jax.random.normal(k2, (batch, img, img, 3)) * 0.35
+    # DeiT-style translation augmentation (static shift; deterministic).
+    rs = np.random.RandomState(seed * 100003 + step)
+    x = jnp.roll(x, (rs.randint(-2, 3), rs.randint(-2, 3)), axis=(1, 2))
+    return {"images": jnp.tanh(x), "labels": labels}
+
+
+def host_shard_iterator(cfg: DataConfig, start_step: int, *, shard: int = 0,
+                        n_shards: int = 1):
+    """Restartable iterator: resuming from `start_step` replays identically."""
+    step = start_step
+    while True:
+        yield lm_batch(cfg, step, shard=shard, n_shards=n_shards)
+        step += 1

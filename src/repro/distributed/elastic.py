@@ -1,0 +1,39 @@
+"""Elastic scaling: rebuild the mesh after membership changes and reshard.
+
+Recovery path on node failure / straggler eviction:
+  1. the launcher restarts surviving processes with the new device count;
+  2. :func:`best_mesh` re-carves (data, model) for that count, keeping the
+     model axis (weight shards must still fit) and shrinking/growing data;
+  3. params/opt-state reload from the latest checkpoint under the new mesh
+     (checkpoints store global arrays, so resharding is just placement);
+  4. the data pipeline continues from the checkpointed step — batches are a
+     pure function of (step, shard), so no data is lost or replayed.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import (filter_mesh_axes, named_shardings,
+                                        param_specs)
+
+
+def best_mesh(n_devices: int, *, model_parallel: int = None,
+              axes=("data", "model")) -> Mesh:
+    """Largest (data, model) mesh for the surviving device count."""
+    if model_parallel is None:
+        # Keep model axis as large as possible but <= sqrt(n).
+        model_parallel = 1
+        for m in range(1, int(n_devices ** 0.5) + 1):
+            if n_devices % m == 0:
+                model_parallel = m
+    data = n_devices // model_parallel
+    return jax.make_mesh((data, model_parallel), axes)
+
+
+def reshard_to(tree, mesh: Mesh):
+    """Place a (host-global) pytree onto ``mesh`` per the standard rules."""
+    specs = filter_mesh_axes(param_specs(tree), mesh)
+    sh = named_shardings(specs, mesh)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, sh)

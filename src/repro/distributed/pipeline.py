@@ -1,0 +1,80 @@
+"""Pipeline parallelism: shard_map GPipe over a "stage" mesh axis.
+
+An alternative carve of the pod axis: each stage holds a contiguous slice of
+layers; microbatches stream through with ``jax.lax.ppermute`` boundary
+transfers.  The schedule below is the classic GPipe fill-drain loop with
+num_microbatches >= num_stages for good utilization; activations cross
+stages once per microbatch per boundary.
+
+The production default keeps "pod" as outer DP (low-frequency gradient
+all-reduce beats per-microbatch activation transfers on cross-pod links);
+this module exists for workloads where layer memory forces model depth to
+span pods, and is exercised by a subprocess test on an 8-device host mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(stage_fn: Callable, params_stacked, x_microbatches,
+                     mesh: Mesh, *, axis: str = "stage"):
+    """Run microbatches through pipeline stages.
+
+    stage_fn(stage_params, x) -> x : one stage's computation.
+    params_stacked: pytree with leading dim = n_stages, sharded on ``axis``.
+    x_microbatches: (n_micro, mb, ...) replicated input microbatches.
+    Returns (n_micro, mb, ...) outputs (valid on the last stage, replicated
+    back via psum-mask).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_microbatches.shape[0]
+    steps = n_micro + n_stages - 1
+
+    def per_stage(params, xs):
+        stage = jax.lax.axis_index(axis)
+        # Inside shard_map, the stage-sharded leading dim has local size 1.
+        params = jax.tree_util.tree_map(lambda w: w[0], params)
+        buf = jnp.zeros_like(xs[0])                    # current activation
+        outs = jnp.zeros_like(xs)
+
+        def body(i, carry):
+            buf, outs = carry
+            mb_idx = i - stage
+            # Stage 0 ingests microbatch i; others use the permuted buffer.
+            inject = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(i, 0, n_micro - 1), 0, keepdims=False)
+            cur = jnp.where(stage == 0, inject, buf)
+            active = (mb_idx >= 0) & (mb_idx < n_micro)
+            y = stage_fn(params, cur)
+            y = jnp.where(active, y, cur)
+            # Last stage records finished microbatches.
+            outs = jax.lax.cond(
+                active & (stage == n_stages - 1),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(mb_idx, 0, n_micro - 1), 0),
+                lambda o: o, outs)
+            # Shift activations stage -> stage+1.
+            nxt = jax.lax.ppermute(
+                y, axis, [(s, s + 1) for s in range(n_stages - 1)])
+            return nxt, outs
+
+        buf, outs = jax.lax.fori_loop(0, steps, body, (buf, outs))
+        # Broadcast final outputs from the last stage to all.
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)),
+            axis)
+        return outs
+
+    pspec = jax.tree_util.tree_map(
+        lambda _: P(axis), params_stacked,
+        is_leaf=lambda x: hasattr(x, "ndim"))
+    fn = shard_map(per_stage, mesh=mesh,
+                   in_specs=(P(axis), P()), out_specs=P(),
+                   check_rep=False)
+    return fn(params_stacked, x_microbatches)

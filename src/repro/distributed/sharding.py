@@ -1,0 +1,267 @@
+"""Logical-axis sharding rules -> GSPMD shardings.
+
+Models annotate activations with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); the active :class:`Rules` maps
+logical names to mesh axes.  Parameter shardings are derived structurally
+from the param-tree path (column- vs row-parallel linears, expert-parallel
+3D weights, vocab-sharded embeddings), so the same model code runs on any
+mesh carve — single-pod (data, model), multi-pod (pod, data, model), or a
+test mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Parent-key classification for linear weights ("w": (in, out)).
+COL_PARALLEL = {"wq", "wk", "wv", "up", "gate", "w_gate", "w_in",
+                "w_a", "w_i", "lm_head", "head", "patch"}
+ROW_PARALLEL = {"wo", "down", "w_down", "w_out"}
+REPLICATED = {"router", "in_proj", "out_proj"}  # ssd mixer + routers stay local
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    batch: tuple = ("pod", "data")
+    seq: tuple = ()                # sequence parallelism axis, when used
+    seq_tp: tuple = ()             # Megatron-SP: residual seq over TP axis
+    model: tuple = ("model",)
+    expert: tuple = ("model",)
+    expert_cap: tuple = ("data",)  # expert-buffer capacity dim (EPxDP grid)
+    mesh: object = None            # concrete Mesh (enables shard_map paths)
+    int_bf16_reduce: bool = False  # row-parallel int linears psum in bf16
+    moe_a2a: bool = False          # explicit all-to-all expert dispatch
+    expert_fsdp: bool = False      # expert weights' dout sharded over "data"
+
+    def axes(self, name: str):
+        ax = getattr(self, name, ())
+        return ax if len(ax) != 1 else ax[0]
+
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    _ACTIVE.append(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> Optional[Rules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def shard(x, *logical_axes):
+    """Constrain activation sharding by logical axis names (no-op w/o rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = P(*[rules.axes(a) if a else None for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings from tree structure
+# ---------------------------------------------------------------------------
+
+def _spec_for(path_keys: list[str], leaf) -> P:
+    ndim = getattr(leaf, "ndim", 0)
+    name = path_keys[-1] if path_keys else ""
+    parent = path_keys[-2] if len(path_keys) > 1 else ""
+    # Scan-stacked leading dim ("units", "layers", "enc_layers", ...).
+    stacked = 1 if any(k == "units" or k.endswith("layers")
+                       for k in path_keys) else 0
+    pad = (None,) * stacked
+
+    def spec(*s):
+        assert stacked + len(s) == ndim, (path_keys, ndim, s)
+        return P(*pad, *s)
+
+    if ndim == 0:
+        return P()
+    # Embeddings: vocab-sharded rows.
+    if name in ("emb", "emb_q"):
+        return spec("model", None)
+    if name == "emb_scale":
+        return spec("model")
+    if name in ("pos_emb", "cls"):
+        return P(*((None,) * ndim))
+    # Expert-parallel 3D weights.
+    if ndim - stacked == 3 and name in ("w", "w_q", "w_scale"):
+        return spec("model", None, None)
+    if parent in REPLICATED:
+        return P(*((None,) * ndim))
+    if parent in COL_PARALLEL:
+        if name == "w":
+            return spec(None, "model")
+        if name == "w_q":
+            return spec("model", None)
+        if name in ("b", "w_scale"):
+            return spec("model")
+    if parent in ROW_PARALLEL:
+        if name == "w":
+            return spec("model", None)
+        if name == "w_q":
+            return spec(None, "model")
+        if name in ("b", "w_scale"):     # out-dim params: replicated
+            return spec(None)
+    # Elementwise params living on a model-sharded feature dim.
+    if name == "lam":
+        return spec("model")
+    if name == "conv_w" and "rglru" in path_keys:
+        return spec(None, "model")      # (width, d_rnn), d_rnn is TP-sharded
+    return P(*((None,) * ndim))
+
+
+def param_specs(params, *, expert_fsdp: bool = False) -> object:
+    """PartitionSpec tree mirroring ``params``.
+
+    ``expert_fsdp``: additionally shard MoE expert weights' output dim over
+    "data" (FSDP-style) — needed to fit large MoE training states in HBM.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        spec = _spec_for(keys, leaf)
+        if (expert_fsdp and keys and keys[-1] in ("w", "w_q", "w_scale")
+                and len(keys) > 1 and keys[-2].startswith("experts_")):
+            entries = list(spec)
+            entries[-1] = "data"          # (.., E, din, dout): dout over data
+            spec = P(*entries)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_specs(state, spec_tree, *, data_size: int, axis: str = "data"):
+    """ZeRO-1: extend each optimizer-state spec with ``axis`` on the best
+    unsharded dim (largest, preferring divisibility by ``data_size``)."""
+    def extend(spec, leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return spec
+        entries = list(spec)
+        if any(e == axis or (isinstance(e, (tuple, list)) and axis in e)
+               for e in entries):
+            return spec                # already data-sharded (e.g. FSDP)
+        cands = [i for i, e in enumerate(entries) if e is None]
+        if not cands:
+            return spec
+        div = [i for i in cands if leaf.shape[i] % data_size == 0
+               and leaf.shape[i] >= data_size]
+        pick_from = div or []
+        if not pick_from:
+            return spec
+        i = max(pick_from, key=lambda j: leaf.shape[j])
+        entries[i] = axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map(
+        extend, spec_tree, state, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_abs, batch_axes) -> object:
+    """Input batch shardings: leading (batch) dim over ``batch_axes``."""
+    ax = batch_axes if len(batch_axes) != 1 else batch_axes[0]
+
+    def f(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0 or not batch_axes:
+            return P(*((None,) * nd))
+        return P(ax, *((None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map(f, batch_abs)
+
+
+def cache_specs(cache_abs, batch_axes) -> object:
+    """KV/recurrent-cache shardings: batch over ``batch_axes``, cache
+    sequence over "model" (kv heads rarely divide TP degree), states'
+    feature dim over "model" where the producing projections are TP-sharded.
+    """
+    bax = batch_axes if len(batch_axes) != 1 else (
+        batch_axes[0] if batch_axes else None)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_abs)[0]
+    treedef = jax.tree_util.tree_structure(cache_abs)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        nd = getattr(leaf, "ndim", 0)
+        stacked = 1 if ("units" in keys or "layers" in keys) else 0
+        pad = (None,) * stacked
+        if name in ("k", "v", "ek", "ev") and nd - stacked == 4:
+            specs.append(P(*pad, bax, None, "model", None))
+        elif name == "h" and nd - stacked == 2:          # rglru state
+            specs.append(P(*pad, bax, "model"))
+        elif name == "conv" and nd - stacked == 3:
+            specs.append(P(*pad, bax, None, "model"))
+        elif name == "h" and nd - stacked == 4:          # ssd state
+            specs.append(P(*pad, bax, None, None, None))
+        elif nd == 0:
+            specs.append(P())
+        else:
+            specs.append(P(*((None,) * nd)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def enforce_divisible(spec_tree, abs_tree, mesh: Mesh):
+    """Drop sharding on any dim whose size isn't divisible by the axis size
+    (jit in_shardings require exact divisibility; e.g. vocab 50280 % 16)."""
+    def ax_size(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            n = 1
+            for a in entry:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[entry]
+
+    def fix(spec, leaf):
+        shape = getattr(leaf, "shape", None)
+        if shape is None or not isinstance(spec, P):
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, entry in zip(shape, entries):
+            n = ax_size(entry)
+            out.append(entry if (n > 1 and dim % n == 0) or n == 1 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(fix, spec_tree, abs_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def filter_mesh_axes(spec_tree, mesh: Mesh):
+    """Drop mesh-axis names that don't exist on ``mesh`` (e.g. no "pod")."""
+    names = set(mesh.axis_names)
+
+    def fix(spec: P) -> P:
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+            elif isinstance(entry, (tuple, list)):
+                kept = tuple(a for a in entry if a in names)
+                out.append(kept if kept else None)
+            else:
+                out.append(entry if entry in names else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(fix, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: integer attention with embedded base-2 softmax.
+
+Paper mapping (Fig. 3-4): the systolic array computes a full integer QK^T
+row while the scan chain accumulates Sigma = sum_j exp(...); the quantizer
+(thresholds scaled by Sigma) then emits low-bit probabilities that feed the
+integer PV matmul.  On TPU we stream K/V tiles through VMEM in two passes:
+
+  pass 1 (stats): online integer-shift softmax statistics per query row —
+      m   = floor(running max of x),          x = sc * (Qq Kq^T)
+      s   = running sum of (1+r)*2^(x-m)      (rescale by 2^dm is EXACT
+      xm  = running max of x                   because m is an integer)
+  pass 2 (pv):    re-compute QK^T tiles (int8 MACs are 2x-cheap), quantize
+      probs against the Sigma-scaled grid, accumulate integer PV.
+
+Two int8 passes cost the same MXU FLOPs as one bf16 pass and keep the PV
+contraction fully integer, matching the paper's dataflow.  attn_bits <= 7 so
+prob codes fit int8 (documented deviation: the paper's 8-bit unsigned probs
+use the XLA path).  int32 PV accumulation is safe while
+attn_bits + 7 + log2(Sk) <= 31 (e.g. 7-bit probs up to 128k keys).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _exp2_shift(x):
+    f = jnp.floor(x)
+    return jnp.ldexp(1.0 + (x - f), f.astype(jnp.int32))
+
+
+def _mask(i, kblk, bq, bk, sq, causal, window):
+    q_pos = (i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)) % sq
+    k_pos = kblk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def _stats_kernel(q_ref, k_ref, sc_ref, m_ref, s_ref, xm_ref,
+                  mb_ref, sb_ref, xb_ref, *, nk, bq, bk, sq, causal, window):
+    i, kblk = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kblk == 0)
+    def _init():
+        mb_ref[...] = jnp.full_like(mb_ref, NEG)
+        sb_ref[...] = jnp.zeros_like(sb_ref)
+        xb_ref[...] = jnp.full_like(xb_ref, NEG)
+
+    acc = jnp.dot(q_ref[0], k_ref[0].T, preferred_element_type=jnp.int32)
+    x = acc.astype(jnp.float32) * sc_ref[0, 0]
+    x = jnp.where(_mask(i, kblk, bq, bk, sq, causal, window), x, NEG)
+    x = jnp.maximum(x, -120.0)
+
+    m_old = mb_ref[...]
+    m_new = jnp.maximum(m_old, jnp.floor(jnp.max(x, axis=-1)))
+    e = _exp2_shift(x - m_new[:, None])
+    e = jnp.where(x <= -120.0, 0.0, e)
+    # 2^(m_old - m_new) rescale is exact: both are integers.
+    sb_ref[...] = sb_ref[...] * jnp.exp2(m_old - m_new) + jnp.sum(e, axis=-1)
+    mb_ref[...] = m_new
+    xb_ref[...] = jnp.maximum(xb_ref[...], jnp.max(x, axis=-1))
+
+    @pl.when(kblk == nk - 1)
+    def _out():
+        m_ref[0, :] = mb_ref[...]
+        s_ref[0, :] = jnp.maximum(sb_ref[...], 1e-30)
+        xm_ref[0, :] = xb_ref[...]
+
+
+def _pv_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, m_ref, s_ref, xm_ref,
+               o_ref, acc_ref, *, nk, bq, bk, sq, causal, window, qmax):
+    i, kblk = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kblk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc = jnp.dot(q_ref[0], k_ref[0].T, preferred_element_type=jnp.int32)
+    x = acc.astype(jnp.float32) * sc_ref[0, 0]
+    valid = _mask(i, kblk, bq, bk, sq, causal, window)
+    x = jnp.maximum(jnp.where(valid, x, NEG), -120.0)
+
+    m = m_ref[0, :][:, None]
+    s = s_ref[0, :][:, None]
+    emax = _exp2_shift(xm_ref[0, :] - m_ref[0, :])[:, None]
+    dattn = jnp.maximum(emax / s, 1e-8) / qmax          # Sigma-scaled grid
+    e = jnp.where(x <= -120.0, 0.0, _exp2_shift(x - m))
+    p_q = jnp.clip(jnp.round(e / (s * dattn)), 0, qmax).astype(jnp.int8)
+    acc_ref[...] += jnp.dot(p_q, v_ref[0], preferred_element_type=jnp.int32)
+
+    @pl.when(kblk == nk - 1)
+    def _out():
+        o_ref[0] = acc_ref[...].astype(jnp.float32) * (dattn * vs_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "attn_bits", "causal", "window", "bq", "bk", "interpret"))
+def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
+                  window=None, bq=128, bk=128, interpret=True):
+    """Integer attention over int8 operands.
+
+    q_q: (H, Sq, D) int8 (GQA pre-folded: G query groups stacked along Sq,
+    row r has position r % true_Sq); k_q, v_q: (H, Sk, D) int8.
+    ``sc`` = softmax_scale * dq * dk * log2(e) (scalar f32);
+    ``v_scale`` = dv.  Returns (H, Sq, D) f32.
+    """
+    assert attn_bits <= 7, "int8 prob codes need attn_bits <= 7"
+    h, sq, d = q_q.shape
+    sk = k_q.shape[1]
+    qmax = float((1 << attn_bits) - 1)
+
+    pq_, pk_ = (-sq) % bq, (-sk) % bk
+    if pq_:
+        q_q = jnp.pad(q_q, ((0, 0), (0, pq_), (0, 0)))
+    if pk_:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pk_), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pk_), (0, 0)))
+    sqp, skp = sq + pq_, sk + pk_
+    nq, nk = sqp // bq, skp // bk
+    sc2 = jnp.asarray(sc, jnp.float32).reshape(1, 1)
+    vs2 = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
+
+    qspec = pl.BlockSpec((1, bq, d), lambda h, i, k: (h, i, 0))
+    kspec = pl.BlockSpec((1, bk, d), lambda h, i, k: (h, k, 0))
+    sspec = pl.BlockSpec((1, 1), lambda h, i, k: (0, 0))
+    rowspec = pl.BlockSpec((1, bq), lambda h, i, k: (h, i))
+
+    stats = pl.pallas_call(
+        functools.partial(_stats_kernel, nk=nk, bq=bq, bk=bk, sq=sq,
+                          causal=causal, window=window),
+        grid=(h, nq, nk),
+        in_specs=[qspec, kspec, sspec],
+        out_specs=[rowspec, rowspec, rowspec],
+        out_shape=[jax.ShapeDtypeStruct((h, sqp), jnp.float32)] * 3,
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32)] * 3,
+        interpret=interpret,
+    )
+    m, s, xm = stats(q_q, k_q, sc2)
+
+    out = pl.pallas_call(
+        functools.partial(_pv_kernel, nk=nk, bq=bq, bk=bk, sq=sq,
+                          causal=causal, window=window, qmax=qmax),
+        grid=(h, nq, nk),
+        in_specs=[qspec, kspec,
+                  pl.BlockSpec((1, bk, d), lambda h, i, k: (h, k, 0)),
+                  sspec, sspec, rowspec, rowspec, rowspec],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, k: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sqp, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.int32)],
+        interpret=interpret,
+    )(q_q, k_q, v_q, sc2, vs2, m, s, xm)
+    return out[:, :sq]

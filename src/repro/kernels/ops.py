@@ -1,0 +1,42 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True so the kernels validate on CPU (this
+container); on TPU pass ``interpret=False`` (or set REPRO_PALLAS_COMPILED=1)
+to run the compiled MXU path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor
+from repro.core.integerize import QLinearParams
+from repro.core.softmax2 import LOG2E
+from repro.kernels.int_attention import int_attention
+from repro.kernels.pq_layernorm import pq_layernorm
+from repro.kernels.qmatmul import qmatmul
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+def qlinear_op(x: QTensor, p: QLinearParams, **kw):
+    """Kernel-backed version of core.integerize.int_linear (2D inputs)."""
+    scale = (p.w_scale * x.scale).astype(jnp.float32)
+    bias = None if p.bias is None else p.bias.astype(jnp.float32)
+    kw.setdefault("interpret", _INTERPRET)
+    return qmatmul(x.q, p.w_q, scale, bias, **kw)
+
+
+def int_attention_op(q: QTensor, k: QTensor, v: QTensor, *, softmax_scale,
+                     attn_bits=7, causal=True, window=None, **kw):
+    """Kernel-backed integer attention on (H, S, D) QTensors."""
+    sc = softmax_scale * q.scale * k.scale * LOG2E
+    kw.setdefault("interpret", _INTERPRET)
+    return int_attention(q.q, k.q, v.q, sc, v.scale, attn_bits=attn_bits,
+                         causal=causal, window=window, **kw)
+
+
+def pq_layernorm_op(x, gamma, beta, delta, **kw):
+    kw.setdefault("interpret", _INTERPRET)
+    return pq_layernorm(x, gamma, beta, delta, **kw)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every kernel (exact intended semantics, no tiling)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softmax2 import exp2_shift
+
+
+def qmatmul_ref(x_q, w_q, scale, bias=None):
+    """int8 (M,K) @ int8 (N,K)^T * scale[n] + bias[n] -> f32 (M,N)."""
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32).T)
+    out = acc.astype(jnp.float32) * scale[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out
+
+
+def int_attention_ref(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
+                      causal=True, window=None):
+    """Full-row integer attention with base-2 softmax (paper semantics).
+
+    Same shapes/contract as kernels.int_attention (q rows wrap modulo Sq for
+    GQA folding).
+    """
+    h, sq, d = q_q.shape
+    sk = k_q.shape[1]
+    qmax = (1 << attn_bits) - 1
+    acc = jnp.einsum("hqd,hkd->hqk", q_q.astype(jnp.int32),
+                     k_q.astype(jnp.int32))
+    x = acc.astype(jnp.float32) * sc
+    q_pos = (jnp.arange(sq) % sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    x = jnp.maximum(jnp.where(mask, x, -1e30), -120.0)
+    m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))
+    e = jnp.where(x <= -120.0, 0.0, exp2_shift(x - m))
+    s = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    emax = jnp.max(e, axis=-1, keepdims=True)
+    dattn = jnp.maximum(emax / s, 1e-8) / qmax
+    p_q = jnp.clip(jnp.round(e / (s * dattn)), 0, qmax)
+    pv = jnp.einsum("hqk,hkd->hqd", p_q.astype(jnp.int32),
+                    v_q.astype(jnp.int32))
+    return pv.astype(jnp.float32) * (dattn * v_scale)
+
+
+def pq_layernorm_ref(x, gamma, beta, delta, *, bits=8, eps=1e-6,
+                     rms_only=False):
+    xf = x.astype(jnp.float32)
+    if rms_only:
+        nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        nrm = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = nrm * gamma[None, :]
+    if beta is not None:
+        y = y + beta[None, :]
+    qmin, qmax = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return jnp.clip(jnp.round(y / delta), qmin, qmax).astype(jnp.int8)

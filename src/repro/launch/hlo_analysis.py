@@ -1,0 +1,213 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis`` gives per-device FLOPs/bytes; collective traffic is parsed
+from the SPMD-partitioned optimized HLO text (operand/result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+Hardware model (TPU v5e):
+  197 TFLOP/s bf16 per chip (394 TOPS int8), 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_OPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        bytes_per = _DTYPE_BYTES.get(dtype)
+        if bytes_per is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * bytes_per
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result sizes of every collective op, keyed by op kind.
+
+    HLO lines look like ``%name = f32[8,32]{1,0} all-reduce(%dot), ...`` —
+    the op token is the last whitespace-separated token before the first
+    '('; everything before it is the result type (whose dims we count).
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls or "(" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1].strip()
+        head = rhs.split("(", 1)[0]
+        toks = head.split()
+        if not toks:
+            continue
+        op = toks[-1]
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue                   # async pair: counted at -start
+        if base in _COLLECTIVES:
+            out[base] = out.get(base, 0) + _shape_bytes(head)
+    return out
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if (ls.startswith("%") or ls.startswith("ENTRY")) and ls.endswith("{"):
+            name = ls.split()[1] if ls.startswith("ENTRY") else ls.split()[0]
+            cur = name.lstrip("%").split("(")[0].rstrip(" ")
+            comps[cur] = []
+        elif ls == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(ls)
+    return comps
+
+
+_WHILE_RE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def collective_bytes_scaled(hlo_text: str) -> dict[str, int]:
+    """Collective result bytes with while-loop bodies scaled by trip count.
+
+    Scan-over-layers puts per-layer collectives inside while bodies, which a
+    flat line count would tally once; this walks whiles recursively, reading
+    the trip count from the largest integer constant in the loop condition
+    (jax emits ``constant(N)`` + compare for counted loops).
+    """
+    comps = _split_computations(hlo_text)
+
+    def comp_colls(name: str) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for ls in comps.get(name, ()):  # noqa: B905
+            if "=" not in ls or "(" not in ls:
+                continue
+            rhs = ls.split("=", 1)[1].strip()
+            head = rhs.split("(", 1)[0]
+            toks = head.split()
+            op = toks[-1] if toks else ""
+            base = op[:-6] if op.endswith("-start") else op
+            if not op.endswith("-done") and base in _COLLECTIVES:
+                out[base] = out.get(base, 0) + _shape_bytes(head)
+            m = _WHILE_RE.search(rhs)
+            if m and " while(" in " " + rhs:
+                cond, body = m.group(1), m.group(2)
+                trips = [int(t) for t in _TRIP_RE.findall(
+                    "\n".join(comps.get(cond, ())))]
+                trip = max(trips) if trips else 1
+                for k, v in comp_colls(body).items():
+                    out[k] = out.get(k, 0) + v * trip
+        return out
+
+    entry = next((n for n in comps if "main" in n or n.startswith("entry")),
+                 None)
+    if entry is None:
+        # fall back: the computation that contains the ENTRY marker order
+        entry = list(comps)[-1]
+    return comp_colls(entry)
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def collective_report(hlo_text: str, top: int = 15) -> list[tuple]:
+    """Top collectives by (trip-scaled) bytes, attributed via op_name."""
+    comps = _split_computations(hlo_text)
+
+    items: list[tuple] = []
+
+    def walk(name: str, mult: int):
+        for ls in comps.get(name, ()):
+            if "=" not in ls or "(" not in ls:
+                continue
+            rhs = ls.split("=", 1)[1].strip()
+            head = rhs.split("(", 1)[0]
+            toks = head.split()
+            op = toks[-1] if toks else ""
+            base = op[:-6] if op.endswith("-start") else op
+            if not op.endswith("-done") and base in _COLLECTIVES:
+                m = _OPNAME_RE.search(ls)
+                src = m.group(1)[-110:] if m else "?"
+                items.append((_shape_bytes(head) * mult, base, src))
+            m = _WHILE_RE.search(rhs)
+            if m and " while(" in " " + rhs:
+                cond, body = m.group(1), m.group(2)
+                trips = [int(t) for t in _TRIP_RE.findall(
+                    "\n".join(comps.get(cond, ())))]
+                walk(body, mult * (max(trips) if trips else 1))
+
+    entry = next((n for n in comps if "main" in n or n.startswith("entry")),
+                 list(comps)[-1] if comps else None)
+    if entry:
+        walk(entry, 1)
+    items.sort(reverse=True)
+    return items[:top]
+
+
+def cost_dict(compiled) -> dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def memory_dict(compiled) -> dict[str, int]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, *, int8_frac: float = 0.0) -> dict:
+    """Three roofline terms in seconds-per-step, per chip.
+
+    ``int8_frac``: fraction of FLOPs that run on the int8 MXU path (2x peak).
+    """
+    eff_peak = PEAK_FLOPS_BF16 * (1 + int8_frac)   # int8 ops count 2x peak
+    t_compute = flops / eff_peak
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom
+    total = max(t_compute, t_memory, t_coll)
+    terms["step_time_lb_s"] = total
+    terms["roofline_fraction"] = (t_compute / total) if total > 0 else 0.0
+    return terms
+
+
+def model_flops_estimate(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 * N * D (training); callers pass 2*N*D for inference."""
+    return 6.0 * n_params_active * tokens

@@ -1,0 +1,191 @@
+"""Attention core: GQA / local-window / cross / decode, in three modes.
+
+The paper's integerized attention computes, per query row (Fig. 2-4):
+
+    int QK^T  ->  x = s*dq*dk*log2(e)*acc  ->  e = (1+r)*2^floor(x - m)
+    Sigma = sum_j e  ->  p_q = quantize(e / Sigma)  ->  int PV  ->  dequant
+
+The systolic array holds the *full key row* while Sigma propagates to the
+row end; we mirror that with a full-row formulation chunked over queries
+(scan), which is also what the serving KV-cache path wants.  Numerical
+stability uses ``m = floor(row max)`` — an integer, so the base-2 shift
+approximation commutes with it *exactly* (2^(x-m) = 2^x >> m).
+
+Modes:
+  float — exact softmax, fp matmuls (baseline / Q-ViT-style path)
+  fake  — QAT: fake-quantized q/k/v and probs, fp matmuls (training graph)
+  int   — integer matmuls + base-2 softmax + quantized probs (serving graph)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.api import QuantConfig
+from repro.core.quant import ACC_DTYPE
+from repro.core.softmax2 import LOG2E, exp2_shift
+from repro.models.scan_util import scan as _scan
+
+NEG_BIG = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    causal: bool = True
+    window: Optional[int] = None      # local attention: keys in (i-window, i]
+    softmax_scale: Optional[float] = None
+    q_chunk: int = 128
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _mask(q_pos, k_pos, spec: AttnSpec):
+    """(bq, Sk) boolean validity mask. Negative k_pos = unwritten ring slot."""
+    m = (k_pos >= 0)[None, :]
+    if spec.causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if spec.window is not None:
+        m = m & (k_pos[None, :] > (q_pos[:, None] - spec.window))
+    return m
+
+
+def _as_q(x, bits):
+    """View a float array or QTensor as (codes, scale) for the int path."""
+    if isinstance(x, quant.QTensor):
+        return x
+    return quant.quantize_tensor(x, bits)
+
+
+def _as_f(x, dtype):
+    return x.dequant().astype(dtype) if isinstance(x, quant.QTensor) else x
+
+
+def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
+                   cfg: Optional[QuantConfig]):
+    """Full-key-row attention for one query chunk.
+
+    q: (B, Hkv, G, bq, D); k, v: (B, Hkv, Sk, D).  Returns (B, Hkv, G, bq, D).
+    """
+    scale = spec.softmax_scale or (1.0 / q.shape[-1] ** 0.5)
+    mode = cfg.mode if cfg is not None else "float"
+    mask = _mask(q_pos, k_pos, spec)                       # (bq, Sk)
+
+    if mode == "int":
+        qq = _as_q(q, cfg.a_bits)
+        kq = _as_q(k, cfg.a_bits)
+        vq = _as_q(v, cfg.a_bits)
+        acc = jnp.einsum("bhgqd,bhkd->bhgqk", qq.q, kq.q,
+                         preferred_element_type=ACC_DTYPE)
+        x = acc.astype(jnp.float32) * (scale * LOG2E * qq.scale * kq.scale)
+        x = jnp.where(mask, x, NEG_BIG)
+        x = jnp.maximum(x, -120.0)                          # keep 2^x in range
+        m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))   # integer shift
+        e = exp2_shift(x - m) if cfg.softmax == "base2" \
+            else jnp.exp2(x - m)
+        e = jnp.where(mask, e, 0.0)
+        sigma = jnp.sum(e, axis=-1, keepdims=True)
+        # Sigma-scaled quantizer (paper §IV-B), per-row dynamic grid.
+        qmax = (1 << cfg.attn_bits) - 1
+        emax = jnp.max(e, axis=-1, keepdims=True)
+        dattn = jnp.maximum(emax / sigma, 1e-8) / qmax      # prob-domain step
+        # Unsigned codes; int32 container in the XLA path (the Pallas kernel
+        # keeps probs in int8 for the MXU, which needs attn_bits <= 7).
+        p_q = jnp.clip(jnp.round(e / (sigma * dattn)), 0, qmax).astype(
+            ACC_DTYPE)
+        pv = jnp.einsum("bhgqk,bhkd->bhgqd", p_q, vq.q,
+                        preferred_element_type=ACC_DTYPE)
+        out = pv.astype(jnp.float32) * (dattn * vq.scale)
+        return out.astype(q.dtype)
+
+    k = _as_f(k, q.dtype)
+    v = _as_f(v, q.dtype)
+    if mode == "fake":
+        q = quant.fake_quant(q, quant.absmax_scale(q, cfg.a_bits), cfg.a_bits)
+        k = quant.fake_quant(k, quant.absmax_scale(k, cfg.a_bits), cfg.a_bits)
+        v = quant.fake_quant(v, quant.absmax_scale(v, cfg.a_bits), cfg.a_bits)
+
+    x = jnp.einsum("bhgqd,bhkd->bhgqk", q, k).astype(jnp.float32) * scale
+    x = jnp.where(mask, x, NEG_BIG)
+    if mode == "fake" and cfg.softmax == "base2":
+        # QAT trains through the paper's shift-exp approximation (Eq. 4).
+        xl = jnp.maximum(x * LOG2E, -120.0)
+        m = jnp.floor(jnp.max(xl, axis=-1, keepdims=True))
+        e = jnp.where(mask, exp2_shift(xl - m), 0.0)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+    else:
+        p = jax.nn.softmax(x, axis=-1)
+    if mode == "fake":
+        qmaxp = (1 << cfg.attn_bits) - 1
+        dp = jnp.maximum(jnp.max(p, -1, keepdims=True), 1e-8) / qmaxp
+        p = quant.fake_quant(p, dp, cfg.attn_bits, True)
+    p = p.astype(q.dtype)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+
+
+def attention(q, k, v, spec: AttnSpec, cfg: Optional[QuantConfig] = None, *,
+              q_offset=0, k_offset=0, k_positions=None):
+    """Multi-head attention with GQA, chunked over queries.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) float arrays or QTensors
+    (int8 KV cache flows in without a dequantized copy); Hq % Hkv == 0.
+    ``q_offset`` gives absolute query positions (decode: cache length);
+    ``k_positions`` (Sk,) overrides key positions for ring caches (negative
+    entries mark unwritten slots and are masked).  Returns (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    sk = k.shape[2]
+    qg = q.reshape(b, hkv, g, sq, d)
+    k_pos = k_positions if k_positions is not None \
+        else k_offset + jnp.arange(sk)
+
+    window = spec.window
+    if sq <= spec.q_chunk:
+        q_pos = q_offset + jnp.arange(sq)
+        out = _row_attention(qg, k, v, q_pos, k_pos, spec, cfg)
+        return out.reshape(b, hq, sq, d)
+
+    # Largest chunk <= q_chunk that divides sq (shapes are static).
+    bq = next(c for c in range(spec.q_chunk, 0, -1) if sq % c == 0)
+    spec = dataclasses.replace(spec, q_chunk=bq)
+    n_chunks = sq // spec.q_chunk
+    qs = qg.reshape(b, hkv, g, n_chunks, spec.q_chunk, d)
+    qs = jnp.moveaxis(qs, 3, 0)                             # (n, B, Hkv, G, bq, D)
+
+    if window is not None and sk > 2 * window:
+        # Local attention: slice just the (bq + window) keys that can matter.
+        span = spec.q_chunk + window
+
+        def chunk_fn(ci, qc):
+            start = jnp.maximum(ci * spec.q_chunk + spec.q_chunk - span, 0)
+            start = jnp.minimum(start, sk - span)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=2)
+            q_pos = q_offset + ci * spec.q_chunk + jnp.arange(spec.q_chunk)
+            kp = k_offset + start + jnp.arange(span)
+            return _row_attention(qc, ks, vs, q_pos, kp, spec, cfg)
+    else:
+        def chunk_fn(ci, qc):
+            q_pos = q_offset + ci * spec.q_chunk + jnp.arange(spec.q_chunk)
+            return _row_attention(qc, k, v, q_pos, k_pos, spec, cfg)
+
+    def body(_, args):
+        ci, qc = args
+        return None, chunk_fn(ci, qc)
+
+    _, outs = _scan(body, None, (jnp.arange(n_chunks), qs))
+    out = jnp.moveaxis(outs, 0, 3)                          # (B,Hkv,G,n,bq,D)
+    return out.reshape(b, hq, sq, d)

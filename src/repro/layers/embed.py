@@ -1,0 +1,17 @@
+"""Token embedding with optional int8 row-quantized storage."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embed_lookup(tokens, p: dict, dtype=jnp.bfloat16):
+    if "emb_q" in p:
+        rows = jnp.take(p["emb_q"], tokens, axis=0).astype(dtype)
+        scale = jnp.take(p["emb_scale"], tokens, axis=0).astype(dtype)
+        return rows * scale[..., None]
+    return jnp.take(p["emb"], tokens, axis=0).astype(dtype)
+
+
+def init_embed(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    return {"emb": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}

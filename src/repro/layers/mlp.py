@@ -1,0 +1,34 @@
+"""Feed-forward blocks (SwiGLU / GELU) over the quantized dense dispatcher."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import QuantConfig, dense
+
+
+def mlp(x, p: dict, cfg: QuantConfig | None, *, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(dense(x, p["gate"], cfg)) * dense(x, p["up"], cfg)
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(x, p["up"], cfg))
+    else:
+        raise ValueError(act)
+    return dense(h.astype(x.dtype), p["down"], cfg, tp="row")
+
+
+def init_mlp(key, d: int, ff: int, *, act: str = "swiglu", dtype=jnp.bfloat16,
+             bias: bool = False) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, ff ** -0.5
+
+    def lin(k, din, dout, std):
+        p = {"w": (jax.random.normal(k, (din, dout)) * std).astype(dtype)}
+        if bias:
+            p["b"] = jnp.zeros((dout,), dtype)
+        return p
+
+    p = {"up": lin(k1, d, ff, std_in), "down": lin(k3, ff, d, std_out)}
+    if act == "swiglu":
+        p["gate"] = lin(k2, d, ff, std_in)
+    return p

@@ -1,0 +1,297 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity dispatch, EP-shardable.
+
+Dispatch is scatter/gather based (no (T, E, C) one-hot einsum): token slots
+are assigned with a cumulative-count over expert ids, tokens beyond capacity
+are dropped (weight zero), and expert FFNs run as batched 3D contractions
+whose expert dim shards over the "model" mesh axis (EP).  The expert matmuls
+go through the same quantized/integerized path as every other linear
+(``dense_expert``), so the paper's reordering applies to MoE unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import integerize, quant
+from repro.core.api import QuantConfig, dense
+from repro.core.quant import ACC_DTYPE
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    shared_expert: bool = False   # llama4-style always-on expert
+
+
+def dense_expert(x, p: dict, cfg: QuantConfig | None):
+    """Batched per-expert linear: x (E, C, din) @ w (E, din, dout)."""
+    b = p.get("b")
+    if cfg is None or cfg.mode == "float":
+        y = jnp.einsum("ecd,edf->ecf", x, p["w"])
+    elif cfg.mode == "fake":
+        w = p["w"]
+        dw = quant.absmax_scale(w, cfg.w_bits, axis=1)       # (E,1,dout)
+        w_fq = quant.fake_quant(w, dw, cfg.w_bits)
+        dx = quant.absmax_scale(x, cfg.a_bits)
+        x_fq = quant.fake_quant(x, dx, cfg.a_bits)
+        y = jnp.einsum("ecd,edf->ecf", x_fq, w_fq)
+    elif cfg.mode == "int":
+        xq = quant.quantize_tensor(x, cfg.a_bits)
+        acc = jnp.einsum("ecd,edf->ecf", xq.q, p["w_q"],
+                         preferred_element_type=ACC_DTYPE)
+        y = acc.astype(jnp.float32) * (xq.scale * p["w_scale"])
+        y = y.astype(x.dtype)
+    else:
+        raise ValueError(cfg.mode)
+    return y + b[:, None, :] if b is not None else y
+
+
+
+def _assign_slots(x, gate, idx, e, cap):
+    """Token->(expert, slot) assignment with capacity dropping.
+
+    Returns (buf, eid, slot, keepw): buf (E, cap, d) dispatched tokens.
+    """
+    t, d = x.shape
+    k = idx.shape[1]
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh               # slots before me
+    pos = jnp.sum(pos * flat_oh, axis=-1)                     # (T*k,)
+    eid = idx.reshape(t * k)
+    keep = (pos < cap).astype(x.dtype)
+    slot = jnp.minimum(pos, cap - 1)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[eid, slot].add(x.repeat(k, axis=0) * keep[:, None])
+    keepw = (gate.reshape(t * k) * keep)[:, None]
+    return buf, eid, slot, keepw
+
+
+def _expert_stack(buf, p, cfg, act):
+    """gate/up/down expert FFN on a (E_local, C, d) buffer (pure local)."""
+    h_gate = jax.nn.silu(dense_expert(buf, p["experts_gate"], cfg)) \
+        if act == "swiglu" else None
+    h = dense_expert(buf, p["experts_up"], cfg)
+    h = (h_gate * h) if h_gate is not None else jax.nn.gelu(h)
+    return dense_expert(h.astype(buf.dtype), p["experts_down"], cfg)
+
+
+def moe_ffn_a2a(x, p, mcfg: MoEConfig, cfg: QuantConfig | None, rules, *,
+                act: str = "swiglu"):
+    """Expert-parallel MoE with an EXPLICIT all-to-all dispatch (shard_map).
+
+    GSPMD's auto-partitioning of the scatter/gather dispatch either
+    replicates expert compute across the data axis or explodes into
+    full-buffer collectives (see the perf log in EXPERIMENTS.md).  This
+    path makes the communication pattern explicit:
+
+      tokens (sharded over DP axes, replicated over "model")
+        -> local top-k routing + capacity slots        (no comm)
+        -> all_to_all over "model": experts to owners  (buf bytes, 2 B/elem)
+        -> [train+FSDP: all_gather expert weight shards over "data" in
+            their storage dtype — inside shard_map nothing convert-hoists]
+        -> local expert FFN (integer or fake-quant)    (no comm)
+        -> reverse all_to_all + local combine          (buf bytes)
+
+    Requires n_experts % mesh["model"] == 0.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    m_sz = mesh.shape["model"]
+    e, k = mcfg.n_experts, mcfg.top_k
+    assert e % m_sz == 0, (e, m_sz)
+    bax = tuple(a for a in rules.batch if a in mesh.axis_names)
+    bax_entry = (bax if len(bax) != 1 else bax[0]) if bax else None
+    n_dp = 1
+    for a in bax:
+        n_dp *= mesh.shape[a]
+    t_local = x.shape[0] // max(n_dp, 1)
+    cap = max(int(t_local * k * mcfg.capacity_factor / e), 1)
+    fsdp = rules.expert_fsdp and "data" in mesh.axis_names
+
+    wspec = P("model", None, "data") if fsdp else P("model", None, None)
+    sspec = P("model", None, "data") if fsdp else P("model", None, None)
+
+    def get_w(pp):
+        return pp["w"] if "w" in pp else pp["w_q"]
+
+    assert t_local % m_sz == 0, (t_local, m_sz)
+    ts = t_local // m_sz                     # token sub-shard per model rank
+    cap_sub = max(int(ts * k * mcfg.capacity_factor / e), 1)
+
+    def per_rank(xl, wr, wg, wu, wd, sg, su, sd):
+        # Tokens arrive replicated over "model": take this rank's sub-shard
+        # so the all-to-all below exchanges REAL data (otherwise expert
+        # compute replicates m_sz times — measured 3x per-device FLOPs).
+        j = jax.lax.axis_index("model")
+        xs = jax.lax.dynamic_slice_in_dim(xl, j * ts, ts, 0)
+        logits = (xs @ wr).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, idx = jax.lax.top_k(probs, k)
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+        buf, eid, slot, keepw = _assign_slots(xs, gate, idx, e, cap_sub)
+
+        # experts -> their owning model-rank; sub-shards concatenate.
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                 tiled=True)           # (E_loc, M*cap_sub, d)
+
+        def expand(w, sc):
+            if fsdp:   # gather dout shards in storage dtype (bf16/int8)
+                w = jax.lax.all_gather(w, "data", axis=2, tiled=True)
+                if sc is not None and sc.ndim == 3:
+                    sc = jax.lax.all_gather(sc, "data", axis=2, tiled=True)
+            return w, sc
+
+        lp = {}
+        for name, w, sc in (("experts_gate", wg, sg), ("experts_up", wu, su),
+                            ("experts_down", wd, sd)):
+            if w is None or w.shape[1] == 1:
+                continue
+            w, sc = expand(w, sc)
+            entry = {"w": w} if w.dtype not in (jnp.int8, jnp.uint8) \
+                else {"w_q": w, "w_scale": sc}
+            lp[name] = entry
+        out_buf = _expert_stack(buf, lp, cfg, act)
+        out_buf = jax.lax.all_to_all(out_buf, "model", split_axis=1,
+                                     concat_axis=0, tiled=True)  # (E,cap_sub,d)
+        picked = out_buf[eid, slot]
+        y_sub = jnp.sum((picked * keepw).reshape(ts, k, -1), axis=1)
+        # Re-assemble the full token block (bf16 on the wire, no hoisting
+        # inside shard_map).
+        y = jax.lax.all_gather(y_sub.astype(x.dtype), "model", axis=0,
+                               tiled=True)
+
+        frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32),
+                        axis=0)
+        lb = e * jnp.sum(frac * jnp.mean(probs, axis=0))
+        for a in ("model",) + tuple(bax):
+            lb = jax.lax.pmean(lb, a)
+        return y, lb
+
+    def warg(name):
+        pp = p[name] if name in p else None
+        if pp is None:
+            return None, None
+        return get_w(pp), pp.get("w_scale")
+
+    wg, sg = warg("experts_gate") if act == "swiglu" else (None, None)
+    wu, su = warg("experts_up")
+    wd, sd = warg("experts_down")
+    in_specs = (P(bax_entry, None), P(None, None),
+                wspec, wspec, wspec,
+                sspec if sg is not None else P(),
+                sspec if su is not None else P(),
+                sspec if sd is not None else P())
+    # None weights (gelu MoE) -> placeholder zeros to keep specs static.
+    zero = jnp.zeros((e, 1, 1), x.dtype)
+    args = (x, p["router"]["w"],
+            wg if wg is not None else zero,
+            wu, wd,
+            sg if sg is not None else jnp.zeros(()),
+            su if su is not None else jnp.zeros(()),
+            sd if sd is not None else jnp.zeros(()))
+    fn = shard_map(per_rank, mesh=mesh,
+                   in_specs=in_specs,
+                   out_specs=(P(bax_entry, None), P()),
+                   check_rep=False)
+    y, lb = fn(*args)
+    out = y
+    if mcfg.shared_expert:
+        from repro.layers.mlp import mlp
+        out = out + mlp(x, p["shared"], cfg, act=act)
+    return out, {"lb_loss": lb}
+
+
+def moe_ffn(x, p: dict, mcfg: MoEConfig, cfg: QuantConfig | None, *,
+            act: str = "swiglu"):
+    """x: (T, d) flat tokens -> (T, d), plus aux dict (load-balance loss)."""
+    from repro.distributed.sharding import current_rules
+    rules = current_rules()
+    if (rules is not None and rules.moe_a2a and rules.mesh is not None
+            and "model" in rules.mesh.axis_names
+            and mcfg.n_experts % rules.mesh.shape["model"] == 0):
+        n_dp = 1
+        for a in rules.batch:
+            if a in rules.mesh.axis_names:
+                n_dp *= rules.mesh.shape[a]
+        t_loc = x.shape[0] // max(n_dp, 1)
+        # Decode-sized token blocks can't sub-shard over "model"; the dense
+        # dispatch is cheap there anyway (T ~ batch).
+        if t_loc % rules.mesh.shape["model"] == 0 and t_loc > 0:
+            return moe_ffn_a2a(x, p, mcfg, cfg, rules, act=act)
+    t, d = x.shape
+    e, k = mcfg.n_experts, mcfg.top_k
+    cap = max(int(t * k * mcfg.capacity_factor / e), 1)
+
+    logits = dense(x, p["router"], None).astype(jnp.float32)  # router stays fp
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate, idx = jax.lax.top_k(probs, k)                       # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Slot assignment: position of each (token, choice) within its expert.
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat_oh, axis=0) - flat_oh               # slots before me
+    pos = jnp.sum(pos * flat_oh, axis=-1)                     # (T*k,)
+    eid = idx.reshape(t * k)
+    keep = (pos < cap).astype(x.dtype)
+    slot = jnp.minimum(pos, cap - 1)
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[eid, slot].add(x.repeat(k, axis=0) * keep[:, None])
+    from repro.distributed.sharding import shard
+    # NOTE(perf log): constraining capacity over "data" as well looked like
+    # it should kill the 16x expert-compute replication, but GSPMD resolves
+    # the scatter/gather against a 2-axis-sharded buffer with ~7x MORE
+    # collective traffic (measured: 431 -> 4000 GB/step). Kept single-axis.
+    buf = shard(buf, "expert", None, None)
+
+    h_gate = jax.nn.silu(dense_expert(buf, p["experts_gate"], cfg)) \
+        if act == "swiglu" else None
+    h = dense_expert(buf, p["experts_up"], cfg)
+    h = (h_gate * h) if h_gate is not None else jax.nn.gelu(h)
+    out_buf = dense_expert(h.astype(x.dtype), p["experts_down"], cfg)  # (E, C, d)
+    out_buf = shard(out_buf, "expert", None, None)
+
+    picked = out_buf[eid, slot]                               # (T*k, d)
+    w = (gate.reshape(t * k) * keep)[:, None]
+    out = jnp.sum((picked * w).reshape(t, k, d), axis=1)
+
+    if mcfg.shared_expert:
+        from repro.layers.mlp import mlp
+        out = out + mlp(x, p["shared"], cfg, act=act)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    pmean = jnp.mean(probs, axis=0)
+    aux = {"lb_loss": e * jnp.sum(frac * pmean)}
+    return out, aux
+
+
+def init_moe(key, d: int, ff: int, mcfg: MoEConfig, *, act: str = "swiglu",
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 5)
+    e = mcfg.n_experts
+
+    def ew(k, din, dout):
+        return {"w": (jax.random.normal(k, (e, din, dout)) * din ** -0.5
+                      ).astype(dtype)}
+
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e)) * d ** -0.5
+                         ).astype(dtype)},
+        "experts_up": ew(ks[1], d, ff),
+        "experts_down": ew(ks[2], ff, d),
+    }
+    if act == "swiglu":
+        p["experts_gate"] = ew(ks[3], d, ff)
+    if mcfg.shared_expert:
+        from repro.layers.mlp import init_mlp
+        p["shared"] = init_mlp(ks[4], d, ff, act=act, dtype=dtype)
+    return p

@@ -1,0 +1,34 @@
+"""Norm layers (float path) — quantized variants live in repro.core.pqln."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def layernorm(x, gamma, beta, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)
+
+
+def rmsnorm(x, gamma, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * gamma).astype(x.dtype)
+
+
+def apply_norm(x, p: dict, kind: str, *, eps: float = 1e-6):
+    if kind == "layernorm":
+        return layernorm(x, p["gamma"], p["beta"], eps=eps)
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["gamma"], eps=eps)
+    raise ValueError(kind)
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"gamma": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["beta"] = jnp.zeros((d,), dtype)
+    return p

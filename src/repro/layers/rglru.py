@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(c * r_t * log sigmoid(L))   = a^(c r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill/train uses an associative scan (log-depth on TPU); decode carries h.
+The projections in/out of the block are quantized linears; the recurrence is
+elementwise O(S*d) float — the paper's "cheap ops stay full precision" rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import QuantConfig, dense
+
+C_MULT = 8.0
+CONV_WIDTH = 4
+
+
+def _log_a(lam, r):
+    # log a_t = -c * r_t * softplus(Lambda)  (so 0 < a_t < 1)
+    return -C_MULT * r * jax.nn.softplus(lam)
+
+
+def rglru_scan(x, r, i, lam):
+    """x, r, i: (B, S, D); lam: (D,). Returns h (B, S, D), h_last (B, D)."""
+    log_a = _log_a(lam, r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = gated * (i.astype(jnp.float32) * x.astype(jnp.float32))
+
+    def combine(l, rgt):
+        a1, b1 = l
+        a2, b2 = rgt
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_c
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(x, r, i, lam, h_prev):
+    """Single decode step: x, r, i: (B, D); h_prev: (B, D) f32."""
+    log_a = _log_a(lam, r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * h_prev + gated * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return h.astype(x.dtype), h
+
+
+def temporal_conv(x, w, state=None):
+    """Depthwise width-4 causal conv. x: (B, S, D), w: (CONV_WIDTH, D).
+
+    ``state``: (B, CONV_WIDTH-1, D) trailing context for decode; returns
+    (y, new_state).
+    """
+    if state is None:
+        pad = jnp.zeros_like(x[:, : CONV_WIDTH - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, k:k + x.shape[1]] * w[CONV_WIDTH - 1 - k]
+            for k in range(CONV_WIDTH))
+    new_state = xp[:, -(CONV_WIDTH - 1):].astype(jnp.float32)
+    return y, new_state
+
+
+def rglru_block(x, p: dict, cfg: QuantConfig | None, *, state=None):
+    """Full Griffin recurrent block. x: (B, S, d). state: dict or None.
+
+    Returns (y, new_state) where state = {"h": (B,Drnn) f32, "conv": (...)}.
+    """
+    gate_branch = jax.nn.gelu(dense(x, p["w_gate"], cfg))
+    u = dense(x, p["w_in"], cfg)
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = temporal_conv(u, p["conv_w"], conv_state)
+    r = jax.nn.sigmoid(dense(x, p["w_a"], None))   # small gates stay fp
+    i = jax.nn.sigmoid(dense(x, p["w_i"], None))
+    if state is None:
+        h, h_last = rglru_scan(u, r, i, p["lam"])
+    else:
+        h, h_last = rglru_step(u[:, 0], r[:, 0], i[:, 0], p["lam"], state["h"])
+        h = h[:, None]
+    y = dense(h * gate_branch, p["w_out"], cfg, tp="row")
+    return y, {"h": h_last, "conv": new_conv}
+
+
+def init_rglru(key, d: int, d_rnn: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+
+    def lin(k, din, dout):
+        return {"w": (jax.random.normal(k, (din, dout)) * din ** -0.5
+                      ).astype(dtype)}
+
+    return {
+        "w_gate": lin(ks[0], d, d_rnn),
+        "w_in": lin(ks[1], d, d_rnn),
+        "w_a": lin(ks[2], d, d_rnn),
+        "w_i": lin(ks[3], d, d_rnn),
+        "w_out": lin(ks[4], d_rnn, d),
+        "conv_w": (jax.random.normal(ks[5], (CONV_WIDTH, d_rnn)) * 0.1
+                   ).astype(dtype),
+        "lam": jnp.linspace(0.5, 4.0, d_rnn).astype(jnp.float32),
+    }
+
+
+def init_rglru_state(batch: int, d_rnn: int) -> dict:
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_WIDTH - 1, d_rnn), jnp.float32)}

@@ -1,0 +1,39 @@
+"""Rotary position embeddings: standard (llama-family) and 2d (ChatGLM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions (..., S) -> cos/sin of shape (..., S, dim//2), f32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate_half_pairs(x, cos, sin):
+    """Rotate interleaved pairs (x0,x1),(x2,x3),... — NeoX/ChatGLM layout."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0,
+               rotary_frac: float = 1.0):
+    """Apply RoPE to ``x`` of shape (B, H, S, D) at ``positions`` (B, S).
+
+    ``rotary_frac < 1`` rotates only the leading fraction of head dims —
+    ChatGLM's "2d RoPE" rotates half the dims and leaves the rest as-is
+    (the second positional channel is the identity for standard LM use).
+    """
+    d = x.shape[-1]
+    rd = int(d * rotary_frac)
+    rd -= rd % 2
+    cos, sin = _rope_angles(positions, rd, theta)          # (B, S, rd/2)
+    cos = cos[:, None].astype(x.dtype)                     # (B, 1, S, rd/2)
+    sin = sin[:, None].astype(x.dtype)
+    xr = _rotate_half_pairs(x[..., :rd], cos, sin)
+    if rd == d:
+        return xr
+    return jnp.concatenate([xr, x[..., rd:]], axis=-1)

@@ -1,0 +1,170 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060), chunked algorithm.
+
+Per head: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T;  y_t = C_t h_t.
+The chunked form computes intra-chunk terms as a masked quadratic
+(attention-like) contraction and carries the inter-chunk state with a scan —
+sub-quadratic in sequence length and TPU-friendly (all einsums).
+
+The in/out projections are quantized linears (the paper's technique); the
+SSD recurrence itself is float (small contractions over the state dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import QuantConfig, dense
+from repro.layers.rglru import temporal_conv, CONV_WIDTH
+from repro.models.scan_util import scan as _scan
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_state: int = 128     # N
+    head_dim: int = 64     # P
+    expand: int = 2        # d_inner = expand * d_model
+    n_groups: int = 1      # G (B/C shared across heads per group)
+    chunk: int = 64        # Q
+
+
+def _segsum(log_a):
+    """log cumulative products: out[..., i, j] = sum_{j<k<=i} log_a[..., k]."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]              # sum over (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, scfg: SSDConfig, h0=None):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, g, n).
+
+    Returns y (b, s, h, p) and final state (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    # Largest chunk <= scfg.chunk dividing s (static shapes).
+    q = next(c for c in range(min(scfg.chunk, s), 0, -1) if s % c == 0)
+    nc = s // q
+    rep = h // g
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, g, n).astype(jnp.float32)
+    Bh = jnp.repeat(Bc, rep, axis=3)                        # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    la = dtc * A.astype(jnp.float32)                        # log a, (b,nc,q,h)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]           # dt_j B_j x_j
+
+    # Intra-chunk (quadratic within chunk): y[i] = sum_{j<=i} C_i.B_j L_ij x~_j
+    Lg = _segsum(jnp.moveaxis(la, 3, 2))                    # (b,nc,h,q,q)
+    L = jnp.exp(Lg)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)       # C_i . B_j
+    y_intra = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", scores, L, xdt)
+
+    # Chunk summaries: state contribution of each chunk.
+    cum = jnp.cumsum(la, axis=2)
+    tot = cum[:, :, -1]                                     # (b,nc,h)
+    decay_rest = jnp.exp(tot[:, :, None] - cum)             # prod_{j<k<=Q}
+    chunk_state = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", Bh, xdt, decay_rest)
+
+    # Inter-chunk scan over carried state h: (b, h, p, n).
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, tot_c = inp
+        new = carry * jnp.exp(tot_c)[..., None, None] + st
+        return new, carry                                   # emit state BEFORE chunk
+
+    hT, h_prev = _scan(
+        step, h0, (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(tot, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (b,nc,h,p,n)
+
+    decay_in = jnp.exp(cum)                                 # prod_{0<k<=i}
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, h_prev, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), hT
+
+
+def ssd_step(x, dt, A, B, C, h_prev):
+    """Decode: x (b,h,p), dt (b,h), B,C (b,g,n), h_prev (b,h,p,n)."""
+    g = B.shape[1]
+    rep = x.shape[1] // g
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=1)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32))                # (b,h)
+    upd = jnp.einsum("bhn,bhp,bh->bhpn", Bh, x.astype(jnp.float32), dtf)
+    h = h_prev * a[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    return y.astype(x.dtype), h
+
+
+def ssd_block(x, p: dict, scfg: SSDConfig, cfg: QuantConfig | None, *,
+              state=None):
+    """Full Mamba-2 block. x: (B, S, d). Returns (y, new_state)."""
+    bsz, s, d = x.shape
+    d_inner = scfg.expand * d
+    h = d_inner // scfg.head_dim
+    g, n = scfg.n_groups, scfg.d_state
+
+    zxbcdt = dense(x, p["in_proj"], cfg)
+    z, xs, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + g * n,
+                 2 * d_inner + 2 * g * n], axis=-1)
+    conv_state = None if state is None else state["convs"]
+    xbc = jnp.concatenate([xs, B, C], axis=-1)
+    xbc, new_conv = temporal_conv(jax.nn.silu(xbc), p["conv_w"], conv_state)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    xh = xs.reshape(bsz, s, h, scfg.head_dim)
+    Bg = B.reshape(bsz, s, g, n)
+    Cg = C.reshape(bsz, s, g, n)
+    if state is None:
+        y, hT = ssd_chunked(xh, dt, p["A_log"], Bg, Cg, scfg)
+    else:
+        y1, hT = ssd_step(xh[:, 0], dt[:, 0], p["A_log"], Bg[:, 0], Cg[:, 0],
+                          state["h"])
+        y = y1[:, None]
+    y = y + xh * p["D"][None, None, :, None]                # skip connection
+    y = y.reshape(bsz, s, d_inner)
+    from repro.layers.norms import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_gamma"])
+    out = dense(y, p["out_proj"], cfg)
+    return out, {"h": hT, "convs": new_conv}
+
+
+def init_ssd(key, d: int, scfg: SSDConfig, dtype=jnp.bfloat16) -> dict:
+    d_inner = scfg.expand * d
+    h = d_inner // scfg.head_dim
+    g, n = scfg.n_groups, scfg.d_state
+    d_in_proj = 2 * d_inner + 2 * g * n + h
+    d_conv = d_inner + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": {"w": (jax.random.normal(ks[0], (d, d_in_proj))
+                          * d ** -0.5).astype(dtype)},
+        "out_proj": {"w": (jax.random.normal(ks[1], (d_inner, d))
+                           * d_inner ** -0.5).astype(dtype)},
+        "conv_w": (jax.random.normal(ks[2], (CONV_WIDTH, d_conv)) * 0.1
+                   ).astype(dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": -jnp.exp(jax.random.normal(ks[3], (h,))).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_gamma": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def init_ssd_state(batch: int, d: int, scfg: SSDConfig) -> dict:
+    d_inner = scfg.expand * d
+    h = d_inner // scfg.head_dim
+    d_conv = d_inner + 2 * scfg.n_groups * scfg.d_state
+    return {"h": jnp.zeros((batch, h, scfg.head_dim, scfg.d_state),
+                           jnp.float32),
+            "convs": jnp.zeros((batch, CONV_WIDTH - 1, d_conv), jnp.float32)}

@@ -1,0 +1,317 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment, the audio frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, n_audio_ctx, d_model); the backbone is the
+real workload (32 enc + 32 dec layers for whisper-large-v3).  Self- and
+cross-attention both integerize via the shared attention core; cross-attn
+K/V are computed once at prefill and held in an int8 cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import QuantConfig, dense
+from repro.core.quant import QTensor
+from repro.layers.attention import AttnSpec, attention
+from repro.layers.embed import embed_lookup, init_embed
+from repro.layers.mlp import init_mlp, mlp
+from repro.layers.norms import apply_norm, init_norm
+from repro.models import lm as lm_mod
+from repro.models.scan_util import scan as _scan
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_audio_ctx: int = 1500
+    dtype: str = "bfloat16"
+    quant: Optional[QuantConfig] = None
+    q_chunk: int = 128
+    loss_chunk: int = 512
+    remat: bool = True
+
+    @property
+    def hd(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _sinusoid(n, d):
+    pos = jnp.arange(n)[:, None]
+    dim = jnp.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_attn(key, cfg, bias=True):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+
+    def lin(k, din, dout, b):
+        p = {"w": (jax.random.normal(k, (din, dout)) * din ** -0.5
+                   ).astype(cfg.jdtype)}
+        if b:
+            p["b"] = jnp.zeros((dout,), cfg.jdtype)
+        return p
+
+    # Whisper: q/v projections biased, k unbiased.
+    return {"wq": lin(ks[0], d, cfg.n_heads * hd, bias),
+            "wk": lin(ks[1], d, cfg.n_heads * hd, False),
+            "wv": lin(ks[2], d, cfg.n_heads * hd, bias),
+            "wo": lin(ks[3], cfg.n_heads * hd, d, bias)}
+
+
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg.d_model, "layernorm"),
+            "attn": _init_attn(k1, cfg),
+            "ln2": init_norm(cfg.d_model, "layernorm"),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, act="gelu",
+                            dtype=cfg.jdtype, bias=True)}
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg.d_model, "layernorm"),
+            "self_attn": _init_attn(k1, cfg),
+            "ln2": init_norm(cfg.d_model, "layernorm"),
+            "cross_attn": _init_attn(k2, cfg),
+            "ln3": init_norm(cfg.d_model, "layernorm"),
+            "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, act="gelu",
+                            dtype=cfg.jdtype, bias=True)}
+
+
+def init_params(key, cfg: EncDecConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "embed": init_embed(ks[2], cfg.vocab, cfg.d_model, cfg.jdtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_ln": init_norm(cfg.d_model, "layernorm"),
+        "dec_ln": init_norm(cfg.d_model, "layernorm"),
+        "lm_head": {"w": (jax.random.normal(ks[3],
+                          (cfg.d_model, cfg.vocab)) * cfg.d_model ** -0.5
+                          ).astype(cfg.jdtype)},
+    }
+
+
+def _proj(x, p, cfg, h):
+    b, s, _ = x.shape
+    return dense(x, p, cfg.quant).reshape(b, s, h, cfg.hd).transpose(0, 2, 1, 3)
+
+
+def _attn(x, kv_x, p, cfg: EncDecConfig, *, causal, q_offset=0,
+          k_positions=None, kv_override=None):
+    q = _proj(x, p["wq"], cfg, cfg.n_heads)
+    if kv_override is not None:
+        k, v = kv_override
+    else:
+        kv_x = x if kv_x is None else kv_x
+        k = _proj(kv_x, p["wk"], cfg, cfg.n_heads)
+        v = _proj(kv_x, p["wv"], cfg, cfg.n_heads)
+    spec = AttnSpec(causal=causal, q_chunk=cfg.q_chunk)
+    out = attention(q, k, v, spec, cfg.quant, q_offset=q_offset,
+                    k_positions=k_positions)
+    return dense(lm_mod._merge(out), p["wo"], cfg.quant, tp="row"), (k, v)
+
+
+def _maybe_remat(f, cfg):
+    if not cfg.remat:
+        return f
+    return jax.checkpoint(
+        f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def encode(params, frames, cfg: EncDecConfig):
+    """frames: (B, n_audio_ctx, d_model) stub embeddings -> encoder states."""
+    x = frames.astype(cfg.jdtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(cfg.jdtype)
+
+    def layer(x, p):
+        h, _ = _attn(apply_norm(x, p["ln1"], "layernorm"), None, p["attn"],
+                     cfg, causal=False)
+        x = x + h.astype(x.dtype)
+        x = x + mlp(apply_norm(x, p["ln2"], "layernorm"), p["mlp"],
+                    cfg.quant, act="gelu").astype(x.dtype)
+        return x, None
+
+    x, _ = _scan(_maybe_remat(layer, cfg), x, params["enc_layers"])
+    return apply_norm(x, params["enc_ln"], "layernorm")
+
+
+def _dec_stack(params, x, cfg, *, enc_x=None, cache=None, decode=False,
+               pos0=0):
+    has_cache = cache is not None
+
+    def layer(carry, xs):
+        x = carry
+        p = xs[0]
+        c = xs[1] if has_cache else None
+        new_c = c
+        h_in = apply_norm(x, p["ln1"], "layernorm")
+        if decode:
+            qpos = c["pos"]
+            kq = _proj(h_in, p["self_attn"]["wk"], cfg, cfg.n_heads)
+            vq = _proj(h_in, p["self_attn"]["wv"], cfg, cfg.n_heads)
+            span = c["k"].shape[2]
+            slot = qpos % span
+            mode = cfg.quant.mode if cfg.quant else "float"
+            if mode == "int":
+                knew = jnp.squeeze(jnp.round(kq / c["k_scale"]), 2).astype(jnp.int8)
+                vnew = jnp.squeeze(jnp.round(vq / c["v_scale"]), 2).astype(jnp.int8)
+            else:
+                knew, vnew = jnp.squeeze(kq, 2), jnp.squeeze(vq, 2)
+            ck = jax.lax.dynamic_update_index_in_dim(c["k"], knew, slot, 2)
+            cv = jax.lax.dynamic_update_index_in_dim(c["v"], vnew, slot, 2)
+            j = jnp.arange(span)
+            kpos = qpos - jnp.mod(slot - j, span)
+            if mode == "int":
+                k_all = QTensor(ck, c["k_scale"], cfg.quant.kv_bits)
+                v_all = QTensor(cv, c["v_scale"], cfg.quant.kv_bits)
+                ek = QTensor(c["ek"], c["ek_scale"], cfg.quant.kv_bits)
+                ev = QTensor(c["ev"], c["ev_scale"], cfg.quant.kv_bits)
+            else:
+                k_all, v_all, ek, ev = ck, cv, c["ek"], c["ev"]
+            q = _proj(h_in, p["self_attn"]["wq"], cfg, cfg.n_heads)
+            spec = AttnSpec(causal=True, q_chunk=cfg.q_chunk)
+            h = attention(q, k_all, v_all, spec, cfg.quant, q_offset=qpos,
+                          k_positions=kpos)
+            h = dense(lm_mod._merge(h), p["self_attn"]["wo"], cfg.quant)
+            x = x + h.astype(x.dtype)
+            h2, _ = _attn(apply_norm(x, p["ln2"], "layernorm"), None,
+                          p["cross_attn"], cfg, causal=False,
+                          kv_override=(ek, ev))
+            x = x + h2.astype(x.dtype)
+            new_c = dict(c, k=ck, v=cv, pos=qpos)  # pos bumped once outside
+        else:
+            h, (sk, sv) = _attn(h_in, h_in, p["self_attn"], cfg, causal=True,
+                                q_offset=pos0)
+            x = x + h.astype(x.dtype)
+            h2, (ek, ev) = _attn(apply_norm(x, p["ln2"], "layernorm"), enc_x,
+                                 p["cross_attn"], cfg, causal=False)
+            x = x + h2.astype(x.dtype)
+            if has_cache:
+                new_c = _fill_cache(c, sk, sv, ek, ev, cfg)
+        x = x + mlp(apply_norm(x, p["ln3"], "layernorm"), p["mlp"],
+                    cfg.quant, act="gelu").astype(x.dtype)
+        return x, (new_c if has_cache else None)
+
+    xs = (params["dec_layers"], cache["layers"]) if has_cache \
+        else (params["dec_layers"],)
+    fn = layer if (decode or not cfg.remat) else _maybe_remat(layer, cfg)
+    x, layer_caches = _scan(fn, x, xs)
+    return x, layer_caches
+
+
+def _quant_pair(k, v):
+    ks = jnp.maximum(jnp.max(jnp.abs(k)), 1e-8).astype(jnp.float32) / 127.
+    vs = jnp.maximum(jnp.max(jnp.abs(v)), 1e-8).astype(jnp.float32) / 127.
+    return (jnp.round(k / ks).astype(jnp.int8),
+            jnp.round(v / vs).astype(jnp.int8), ks, vs)
+
+
+def _fill_cache(c, sk, sv, ek, ev, cfg):
+    span = c["k"].shape[2]
+    s_in = sk.shape[2]
+    if s_in < span:
+        pad = [(0, 0), (0, 0), (0, span - s_in), (0, 0)]
+        sk, sv = jnp.pad(sk, pad), jnp.pad(sv, pad)
+    else:
+        sk, sv = sk[:, :, -span:], sv[:, :, -span:]
+    mode = cfg.quant.mode if cfg.quant else "float"
+    if mode == "int":
+        kq, vq, ksc, vsc = _quant_pair(sk, sv)
+        ekq, evq, eksc, evsc = _quant_pair(ek, ev)
+        return dict(c, k=kq, v=vq, k_scale=ksc, v_scale=vsc,
+                    ek=ekq, ev=evq, ek_scale=eksc, ev_scale=evsc)
+    return dict(c, k=sk.astype(c["k"].dtype), v=sv.astype(c["v"].dtype),
+                ek=ek.astype(c["ek"].dtype), ev=ev.astype(c["ev"].dtype))
+
+
+def init_cache(cfg: EncDecConfig, batch: int, max_len: int) -> dict:
+    mode = cfg.quant.mode if cfg.quant else "float"
+    dt = jnp.int8 if mode == "int" else cfg.jdtype
+    h = cfg.n_heads
+
+    def one(_):
+        c = {"k": jnp.zeros((batch, h, max_len, cfg.hd), dt),
+             "v": jnp.zeros((batch, h, max_len, cfg.hd), dt),
+             "ek": jnp.zeros((batch, h, cfg.n_audio_ctx, cfg.hd), dt),
+             "ev": jnp.zeros((batch, h, cfg.n_audio_ctx, cfg.hd), dt),
+             "pos": jnp.zeros((), jnp.int32)}
+        if mode == "int":
+            for n in ("k_scale", "v_scale", "ek_scale", "ev_scale"):
+                c[n] = jnp.ones((), jnp.float32)
+        return c
+
+    return {"layers": jax.vmap(one)(jnp.arange(cfg.n_dec_layers)),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decoder_embed(params, tokens, cfg, pos0):
+    x = embed_lookup(tokens, params["embed"], cfg.jdtype)
+    pos = pos0 + jnp.arange(tokens.shape[1])
+    return x + _sinusoid(100_000, cfg.d_model)[pos].astype(cfg.jdtype)
+
+
+def loss_fn(params, batch, cfg: EncDecConfig):
+    """Teacher-forced NLL (chunked over target length)."""
+    enc_x = encode(params, batch["frames"], cfg)
+    x = decoder_embed(params, batch["tokens"], cfg, 0)
+    x, _ = _dec_stack(params, x, cfg, enc_x=enc_x)
+    x = apply_norm(x, params["dec_ln"], "layernorm")
+    b, s, d = x.shape
+    c = next(cc for cc in range(min(cfg.loss_chunk, s), 0, -1) if s % cc == 0)
+    xc = jnp.moveaxis(x.reshape(b, s // c, c, d), 1, 0)
+    lc = jnp.moveaxis(batch["labels"].reshape(b, s // c, c), 1, 0)
+
+    def chunk(tot, xs):
+        xch, lch = xs
+        logits = dense(xch, params["lm_head"], cfg.quant).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lch[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    tot, _ = _scan(chunk, jnp.zeros((), jnp.float32), (xc, lc))
+    return tot / (b * s), {}
+
+
+def prefill(params, batch, cfg: EncDecConfig, max_len: Optional[int] = None):
+    enc_x = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    cache = init_cache(cfg, tokens.shape[0], max_len or tokens.shape[1])
+    x = decoder_embed(params, tokens, cfg, 0)
+    x, layer_caches = _dec_stack(params, x, cfg, enc_x=enc_x, cache=cache)
+    x = apply_norm(x, params["dec_ln"], "layernorm")
+    cache["layers"] = layer_caches
+    cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    cache["layers"]["pos"] = jnp.full((cfg.n_dec_layers,), tokens.shape[1],
+                                      jnp.int32)
+    return dense(x[:, -1:], params["lm_head"], cfg.quant), cache
+
+
+def decode_step(params, token, cache, cfg: EncDecConfig):
+    x = decoder_embed(params, token, cfg, cache["pos"])
+    x, layer_caches = _dec_stack(params, x, cfg, cache=cache, decode=True)
+    x = apply_norm(x, params["dec_ln"], "layernorm")
+    new_cache = dict(cache, layers=layer_caches, pos=cache["pos"] + 1)
+    new_cache["layers"]["pos"] = cache["layers"]["pos"] + 1
+    return dense(x, params["lm_head"], cfg.quant), new_cache

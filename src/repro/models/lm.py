@@ -1,0 +1,457 @@
+"""Unified decoder-only LM covering dense / GQA / MoE / hybrid / SSM archs.
+
+A config lists a repeating ``block_pattern`` (e.g. ``("rglru", "rglru",
+"local")`` for Griffin-style hybrids); the stack scans over *pattern units*
+with layer-stacked parameters, so HLO size is O(|pattern|), not O(depth) —
+essential for compile times at 1000+-chip scale and 60+-layer models.
+
+Serving uses an int8-quantized KV cache and the paper's integerized
+attention/linear path when ``cfg.quant.mode == "int"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import QuantConfig, dense
+from repro.core.quant import QTensor
+from repro.layers import moe as moe_lib
+from repro.layers.attention import AttnSpec, attention
+from repro.layers.embed import embed_lookup, init_embed
+from repro.layers.mlp import init_mlp, mlp
+from repro.layers.moe import MoEConfig
+from repro.layers.norms import apply_norm, init_norm
+from repro.layers.rglru import init_rglru, init_rglru_state, rglru_block
+from repro.layers.rope import apply_rope
+from repro.layers.ssd import SSDConfig, init_ssd, init_ssd_state, ssd_block
+from repro.distributed.sharding import shard
+from repro.models.scan_util import scan as _scan
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    block_pattern: tuple = ("attn",)          # cycled; "attn"|"local"|"rglru"|"ssd"
+    attn_window: Optional[int] = None
+    rope_theta: float = 10000.0
+    rotary_frac: float = 1.0                  # chatglm "2d": 0.5
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"
+    act: str = "swiglu"
+    moe: Optional[MoEConfig] = None
+    ssd: Optional[SSDConfig] = None
+    d_rnn: Optional[int] = None
+    dtype: str = "bfloat16"
+    quant: Optional[QuantConfig] = None
+    q_chunk: int = 128
+    loss_chunk: int = 512
+    remat: bool = True
+    frontend: Optional[str] = None            # "patch" (VLM stub)
+    n_patches: int = 256
+    causal: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def replace(self, **kw) -> "LMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def block_kinds(cfg: LMConfig) -> list[str]:
+    pat = cfg.block_pattern
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def unit_structure(cfg: LMConfig):
+    """(unit kinds, n_units, remainder kinds)."""
+    unit = tuple(cfg.block_pattern)
+    n_units = cfg.n_layers // len(unit)
+    rem = tuple(block_kinds(cfg)[n_units * len(unit):])
+    return unit, n_units, rem
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+
+def _lin(key, din, dout, dtype, bias=False):
+    p = {"w": (jax.random.normal(key, (din, dout)) * din ** -0.5).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+def init_attn(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    dt = cfg.jdtype
+    return {
+        "wq": _lin(ks[0], d, cfg.n_heads * hd, dt, cfg.qkv_bias),
+        "wk": _lin(ks[1], d, cfg.kv_heads * hd, dt, cfg.qkv_bias),
+        "wv": _lin(ks[2], d, cfg.kv_heads * hd, dt, cfg.qkv_bias),
+        "wo": _lin(ks[3], cfg.n_heads * hd, d, dt),
+    }
+
+
+def init_block(key, cfg: LMConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    d, dt = cfg.d_model, cfg.jdtype
+    p = {"ln1": init_norm(d, cfg.norm)}
+    if kind in ("attn", "local"):
+        p["attn"] = init_attn(ks[0], cfg)
+    elif kind == "rglru":
+        p["rglru"] = init_rglru(ks[0], d, cfg.d_rnn or d, dt)
+    elif kind == "ssd":
+        p["ssd"] = init_ssd(ks[0], d, cfg.ssd, dt)
+    else:
+        raise ValueError(kind)
+    if cfg.d_ff > 0:
+        p["ln2"] = init_norm(d, cfg.norm)
+        if cfg.moe is not None:
+            p["ffn"] = moe_lib.init_moe(ks[1], d, cfg.d_ff, cfg.moe,
+                                        act=cfg.act, dtype=dt)
+        else:
+            p["ffn"] = init_mlp(ks[1], d, cfg.d_ff, act=cfg.act, dtype=dt)
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    unit, n_units, rem = unit_structure(cfg)
+    ks = jax.random.split(key, 4 + len(rem))
+    params = {"embed": init_embed(ks[0], cfg.vocab, cfg.d_model, cfg.jdtype),
+              "final_norm": init_norm(cfg.d_model, cfg.norm),
+              "lm_head": _lin(ks[1], cfg.d_model, cfg.vocab, cfg.jdtype)}
+
+    def init_unit(k):
+        kk = jax.random.split(k, len(unit))
+        return {f"b{j}": init_block(kk[j], cfg, kind)
+                for j, kind in enumerate(unit)}
+
+    if n_units:
+        unit_keys = jax.random.split(ks[2], n_units)
+        params["units"] = jax.vmap(init_unit)(unit_keys)
+    for i, kind in enumerate(rem):
+        params[f"rem{i}"] = init_block(ks[4 + i], cfg, kind)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent cache
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    mode = cfg.quant.mode if cfg.quant else "float"
+    if mode == "int" and cfg.quant.kv_bits == 4:
+        # nibble-packed int4 cache: half the HBM read per decode step.
+        shape = (batch, cfg.kv_heads, max_len, cfg.hd // 2)
+        c = {"k": jnp.zeros(shape, jnp.uint8),
+             "v": jnp.zeros(shape, jnp.uint8),
+             "k_scale": jnp.ones((), jnp.float32),
+             "v_scale": jnp.ones((), jnp.float32)}
+        return c
+    kv_dt = jnp.int8 if mode == "int" else cfg.jdtype
+    shape = (batch, cfg.kv_heads, max_len, cfg.hd)
+    c = {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
+    if mode == "int":
+        c["k_scale"] = jnp.ones((), jnp.float32)
+        c["v_scale"] = jnp.ones((), jnp.float32)
+    return c
+
+
+def init_block_cache(cfg: LMConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "local"):
+        span = max_len if (kind == "attn" or cfg.attn_window is None) \
+            else min(max_len, cfg.attn_window + cfg.q_chunk)
+        return _attn_cache(cfg, batch, span)
+    if kind == "rglru":
+        return init_rglru_state(batch, cfg.d_rnn or cfg.d_model)
+    if kind == "ssd":
+        return init_ssd_state(batch, cfg.d_model, cfg.ssd)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    unit, n_units, rem = unit_structure(cfg)
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if n_units:
+        def one(_):
+            return {f"b{j}": init_block_cache(cfg, kind, batch, max_len)
+                    for j, kind in enumerate(unit)}
+        cache["units"] = jax.vmap(one)(jnp.arange(n_units))
+    for i, kind in enumerate(rem):
+        cache[f"rem{i}"] = init_block_cache(cfg, kind, batch, max_len)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.kv_heads
+    qcfg = cfg.quant
+
+    def split(y, h):
+        # TP constraint on the flat feature dim (always divisible; head
+        # counts often aren't a multiple of the TP degree).
+        y = shard(y, "batch", None, "model")
+        return y.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q = split(dense(x, p["wq"], qcfg), hq)
+    k = split(dense(x, p["wk"], qcfg), hkv)
+    v = split(dense(x, p["wv"], qcfg), hkv)
+    q = apply_rope(q, positions, theta=cfg.rope_theta,
+                   rotary_frac=cfg.rotary_frac)
+    k = apply_rope(k, positions, theta=cfg.rope_theta,
+                   rotary_frac=cfg.rotary_frac)
+
+    window = cfg.attn_window if kind == "local" else None
+    spec = AttnSpec(causal=cfg.causal, window=window, q_chunk=cfg.q_chunk)
+    mode = qcfg.mode if qcfg else "float"
+    new_cache = cache
+
+    if cache is not None and decode:
+        # Ring-buffer cache: slot(p) = p % span (full caches are span>=pos+1).
+        pos = positions[0, 0]
+        span = cache["k"].shape[2]
+        slot = pos % span
+        kv4 = mode == "int" and qcfg.kv_bits == 4
+        if kv4:
+            from repro.core.quant import pack_int4, qrange, unpack_int4
+            qmin, qmax = qrange(4)
+            kq = pack_int4(jnp.squeeze(jnp.clip(
+                jnp.round(k / cache["k_scale"]), qmin, qmax
+            ).astype(jnp.int8), 2))
+            vq = pack_int4(jnp.squeeze(jnp.clip(
+                jnp.round(v / cache["v_scale"]), qmin, qmax
+            ).astype(jnp.int8), 2))
+        elif mode == "int":
+            kq = jnp.squeeze(
+                jnp.round(k / cache["k_scale"]).astype(jnp.int8), 2)
+            vq = jnp.squeeze(
+                jnp.round(v / cache["v_scale"]).astype(jnp.int8), 2)
+        else:
+            kq, vq = jnp.squeeze(k, 2), jnp.squeeze(v, 2)
+        ck = jax.lax.dynamic_update_index_in_dim(cache["k"], kq, slot, 2)
+        cv = jax.lax.dynamic_update_index_in_dim(cache["v"], vq, slot, 2)
+        new_cache = dict(cache, k=ck, v=cv)
+        if kv4:
+            from repro.core.quant import unpack_int4
+            k_all = QTensor(unpack_int4(ck), cache["k_scale"], 4)
+            v_all = QTensor(unpack_int4(cv), cache["v_scale"], 4)
+        elif mode == "int":
+            k_all = QTensor(ck, cache["k_scale"], qcfg.kv_bits)
+            v_all = QTensor(cv, cache["v_scale"], qcfg.kv_bits)
+        else:
+            k_all, v_all = ck, cv
+        # Position of ring slot j: pos - ((slot - j) mod span); < 0 = unwritten.
+        j = jnp.arange(span)
+        k_positions = pos - jnp.mod(slot - j, span)
+        out = attention(q, k_all, v_all, spec, qcfg, q_offset=pos,
+                        k_positions=k_positions)
+    else:
+        out = attention(q, k, v, spec, qcfg, q_offset=positions[0, 0])
+        if cache is not None:                     # prefill: write cache
+            span = cache["k"].shape[2]
+            s_in = k.shape[2]
+            if s_in >= span:
+                # Place position p at ring slot p % span.
+                shift = (s_in - span) % span
+                ks_ = jnp.roll(k[:, :, -span:], shift, axis=2)
+                vs_ = jnp.roll(v[:, :, -span:], shift, axis=2)
+            else:
+                pad = [(0, 0), (0, 0), (0, span - s_in), (0, 0)]
+                ks_, vs_ = jnp.pad(k, pad), jnp.pad(v, pad)
+            if mode == "int" and qcfg.kv_bits == 4:
+                from repro.core.quant import pack_int4
+                ksc = jnp.max(jnp.abs(ks_)).astype(jnp.float32) / 7.
+                vsc = jnp.max(jnp.abs(vs_)).astype(jnp.float32) / 7.
+                kq4 = jnp.clip(jnp.round(ks_ / ksc), -8, 7).astype(jnp.int8)
+                vq4 = jnp.clip(jnp.round(vs_ / vsc), -8, 7).astype(jnp.int8)
+                new_cache = dict(cache, k=pack_int4(kq4), v=pack_int4(vq4),
+                                 k_scale=ksc, v_scale=vsc)
+            elif mode == "int":
+                ksc = jnp.max(jnp.abs(ks_)).astype(jnp.float32) / 127.
+                vsc = jnp.max(jnp.abs(vs_)).astype(jnp.float32) / 127.
+                new_cache = dict(cache,
+                                 k=jnp.round(ks_ / ksc).astype(jnp.int8),
+                                 v=jnp.round(vs_ / vsc).astype(jnp.int8),
+                                 k_scale=ksc, v_scale=vsc)
+            else:
+                new_cache = dict(cache, k=ks_.astype(cache["k"].dtype),
+                                 v=vs_.astype(cache["v"].dtype))
+
+    out = _merge(out)
+    return dense(out, p["wo"], qcfg, tp="row"), new_cache
+
+
+def _merge(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def apply_block(x, p, cfg: LMConfig, kind: str, *, positions, cache=None,
+                decode=False):
+    aux = {}
+    h = apply_norm(x, p["ln1"], cfg.norm)
+    h = shard(h, "batch", "seq_tp", None)
+    if kind in ("attn", "local"):
+        out, new_cache = _attn_mixer(h, p["attn"], cfg, kind, positions,
+                                     cache, decode)
+    elif kind == "rglru":
+        out, new_cache = rglru_block(h, p["rglru"], cfg.quant,
+                                     state=cache if decode else None)
+    elif kind == "ssd":
+        out, new_cache = ssd_block(h, p["ssd"], cfg.ssd, cfg.quant,
+                                   state=cache if decode else None)
+    else:
+        raise ValueError(kind)
+    x = x + out.astype(x.dtype)
+    if cfg.d_ff > 0:
+        h2 = apply_norm(x, p["ln2"], cfg.norm)
+        if cfg.moe is not None:
+            b, s, d = h2.shape
+            out2, aux = moe_lib.moe_ffn(h2.reshape(b * s, d), p["ffn"],
+                                        cfg.moe, cfg.quant, act=cfg.act)
+            out2 = out2.reshape(b, s, d)
+        else:
+            out2 = mlp(h2, p["ffn"], cfg.quant, act=cfg.act)
+        x = x + out2.astype(x.dtype)
+    x = shard(x, "batch", "seq_tp", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+
+def _zeros_aux():
+    return jnp.zeros((), jnp.float32)
+
+
+def stack_forward(x, params, cfg: LMConfig, *, positions, cache=None,
+                  decode=False):
+    unit, n_units, rem = unit_structure(cfg)
+    has_cache = cache is not None
+    aux = _zeros_aux()
+
+    def unit_body(carry, xs):
+        x, aux = carry
+        up = xs[0]
+        uc = xs[1] if has_cache else None
+        new_uc = {}
+        for j, kind in enumerate(unit):
+            bc = uc[f"b{j}"] if has_cache else None
+            x, nbc, a = apply_block(x, up[f"b{j}"], cfg, kind,
+                                    positions=positions, cache=bc,
+                                    decode=decode)
+            new_uc[f"b{j}"] = nbc
+            if "lb_loss" in a:
+                aux = aux + a["lb_loss"]
+        return (x, aux), (new_uc if has_cache else None)
+
+    body = unit_body
+    if cfg.remat and not decode:
+        body = jax.checkpoint(
+            unit_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    new_cache = dict(cache) if has_cache else None
+    if n_units:
+        xs = (params["units"], cache["units"]) if has_cache \
+            else (params["units"],)
+        (x, aux), unit_caches = _scan(body, (x, aux), xs)
+        if has_cache:
+            new_cache["units"] = unit_caches
+    for i, kind in enumerate(rem):
+        bc = cache[f"rem{i}"] if has_cache else None
+        x, nbc, a = apply_block(x, params[f"rem{i}"], cfg, kind,
+                                positions=positions, cache=bc, decode=decode)
+        if has_cache:
+            new_cache[f"rem{i}"] = nbc
+        if "lb_loss" in a:
+            aux = aux + a["lb_loss"]
+    return x, new_cache, aux
+
+
+def _inputs_to_x(params, batch, cfg: LMConfig):
+    x = embed_lookup(batch["tokens"], params["embed"], cfg.jdtype)
+    if cfg.frontend == "patch" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(cfg.jdtype), x], axis=1)
+    return shard(x, "batch", None, None)
+
+
+def forward(params, batch, cfg: LMConfig, *, cache=None, decode=False):
+    """Returns (pre-head hidden states, new_cache, aux)."""
+    x = _inputs_to_x(params, batch, cfg)
+    if decode:
+        positions = jnp.broadcast_to(cache["pos"], (x.shape[0], 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+                                     (x.shape[0], x.shape[1]))
+    x, new_cache, aux = stack_forward(x, params, cfg, positions=positions,
+                                      cache=cache, decode=decode)
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    if new_cache is not None:
+        new_cache["pos"] = (cache["pos"] if cache else 0) + \
+            (1 if decode else x.shape[1])
+    return x, new_cache, aux
+
+
+def logits_fn(params, x, cfg: LMConfig):
+    return dense(x, params["lm_head"], cfg.quant)
+
+
+def lm_loss(params, batch, cfg: LMConfig):
+    """Causal LM loss, sequence-chunked so (B,S,V) logits never materialize."""
+    x, _, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "patch":                   # frontend tokens: no loss
+        x = x[:, -labels.shape[1]:]
+    b, s, d = x.shape
+    c = next(cc for cc in range(min(cfg.loss_chunk, s), 0, -1) if s % cc == 0)
+    xc = jnp.moveaxis(x.reshape(b, s // c, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, s // c, c), 1, 0)
+
+    def chunk(tot, xs):
+        xch, lch = xs
+        logits = logits_fn(params, xch, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lch[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    tot, _ = _scan(chunk, jnp.zeros((), jnp.float32), (xc, lc))
+    loss = tot / (b * s)
+    return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+
+def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None):
+    """Run the full prompt, produce cache + last-position logits."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len or s)
+    x, cache, _ = forward(params, batch, cfg, cache=cache, decode=False)
+    logits = logits_fn(params, x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg: LMConfig):
+    """One serving step: token (B, 1) + cache -> logits (B, 1, V) + cache."""
+    x, cache, _ = forward(params, {"tokens": token}, cfg, cache=cache,
+                          decode=True)
+    return logits_fn(params, x, cfg), cache

@@ -1,0 +1,31 @@
+"""Scan wrapper with a global full-unroll switch.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE (trip count is opaque
+post-lowering), so FLOPs of scan-over-layers models are undercounted by the
+layer count.  The dry-run's flop-accounting pass re-lowers the step with
+every model scan fully unrolled (lowering only — never compiled), giving
+exact whole-program FLOPs.  Production graphs keep rolled scans for compile
+time.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_UNROLL = {"full": False}
+
+
+@contextlib.contextmanager
+def full_unroll():
+    _UNROLL["full"] = True
+    try:
+        yield
+    finally:
+        _UNROLL["full"] = False
+
+
+def scan(body, carry, xs, **kw):
+    if _UNROLL["full"]:
+        kw["unroll"] = True
+    return jax.lax.scan(body, carry, xs, **kw)

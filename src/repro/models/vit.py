@@ -1,0 +1,150 @@
+"""ViT / DeiT-S — the paper's own experimental subject.
+
+DeiT-S: 12 layers, d=384, 6 heads, MLP 4x, LayerNorm, GELU, cls +
+distillation tokens (N = 196 + 2 = 198 at 224x224/patch16 — exactly the
+token count behind Table I's PE/MAC numbers).  The paper fine-tunes this on
+CIFAR-10 with QAT then post-integerizes; both graphs are available here via
+``cfg.quant.mode``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import QuantConfig, dense
+from repro.layers.attention import AttnSpec, attention
+from repro.layers.mlp import init_mlp, mlp
+from repro.layers.norms import apply_norm, init_norm
+from repro.models.scan_util import scan as _scan
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str = "deit_s"
+    n_layers: int = 12
+    d_model: int = 384
+    n_heads: int = 6
+    d_ff: int = 1536
+    img_size: int = 224
+    patch: int = 16
+    channels: int = 3
+    n_classes: int = 10
+    distill_token: bool = True
+    dtype: str = "float32"
+    quant: Optional[QuantConfig] = None
+    q_chunk: int = 256
+    remat: bool = False
+
+    @property
+    def n_patches(self):
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def n_tokens(self):
+        return self.n_patches + 1 + int(self.distill_token)
+
+    @property
+    def hd(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def _init_layer(key, cfg: ViTConfig):
+    ks = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.hd
+
+    def lin(k, din, dout):
+        return {"w": (jax.random.normal(k, (din, dout)) * din ** -0.5
+                      ).astype(cfg.jdtype),
+                "b": jnp.zeros((dout,), cfg.jdtype)}
+
+    return {"ln1": init_norm(d, "layernorm"),
+            "attn": {"wq": lin(ks[0], d, d), "wk": lin(ks[1], d, d),
+                     "wv": lin(ks[2], d, d), "wo": lin(ks[3], d, d)},
+            "ln2": init_norm(d, "layernorm"),
+            "mlp": init_mlp(ks[4], d, cfg.d_ff, act="gelu",
+                            dtype=cfg.jdtype, bias=True)}
+
+
+def init_params(key, cfg: ViTConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    patch_dim = cfg.patch * cfg.patch * cfg.channels
+    n_extra = 1 + int(cfg.distill_token)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "patch": {"w": (jax.random.normal(ks[1], (patch_dim, cfg.d_model))
+                        * patch_dim ** -0.5).astype(cfg.jdtype),
+                  "b": jnp.zeros((cfg.d_model,), cfg.jdtype)},
+        "cls": jnp.zeros((n_extra, cfg.d_model), cfg.jdtype),
+        "pos_emb": (jax.random.normal(ks[2], (cfg.n_tokens, cfg.d_model))
+                    * 0.02).astype(cfg.jdtype),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys),
+        "final_ln": init_norm(cfg.d_model, "layernorm"),
+        "head": {"w": (jax.random.normal(ks[3], (cfg.d_model, cfg.n_classes))
+                       * cfg.d_model ** -0.5).astype(cfg.jdtype),
+                 "b": jnp.zeros((cfg.n_classes,), cfg.jdtype)},
+    }
+
+
+def patchify(images, cfg: ViTConfig):
+    """(B, H, W, C) -> (B, n_patches, patch*patch*C)."""
+    b, h, w, c = images.shape
+    p = cfg.patch
+    x = images.reshape(b, h // p, p, w // p, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // p) * (w // p), p * p * c)
+
+
+def forward(params, images, cfg: ViTConfig):
+    """-> (B, n_classes) logits (cls/distill-token average, DeiT eval)."""
+    x = dense(patchify(images.astype(cfg.jdtype), cfg), params["patch"],
+              cfg.quant)
+    b = x.shape[0]
+    extra = jnp.broadcast_to(params["cls"], (b,) + params["cls"].shape)
+    x = jnp.concatenate([extra, x], axis=1) + params["pos_emb"]
+
+    spec = AttnSpec(causal=False, q_chunk=cfg.q_chunk)
+
+    def layer(x, p):
+        h = apply_norm(x, p["ln1"], "layernorm")
+        bb, s, d = h.shape
+
+        def proj(pp):
+            return dense(h, pp, cfg.quant).reshape(
+                bb, s, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+
+        out = attention(proj(p["attn"]["wq"]), proj(p["attn"]["wk"]),
+                        proj(p["attn"]["wv"]), spec, cfg.quant)
+        out = out.transpose(0, 2, 1, 3).reshape(bb, s, d)
+        x = x + dense(out, p["attn"]["wo"], cfg.quant)
+        x = x + mlp(apply_norm(x, p["ln2"], "layernorm"), p["mlp"],
+                    cfg.quant, act="gelu")
+        return x, None
+
+    fn = layer
+    if cfg.remat:
+        fn = jax.checkpoint(layer)
+    x, _ = _scan(fn, x, params["layers"])
+    x = apply_norm(x, params["final_ln"], "layernorm")
+    n_extra = 1 + int(cfg.distill_token)
+    pooled = jnp.mean(x[:, :n_extra], axis=1)
+    return dense(pooled, params["head"], None).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ViTConfig):
+    logits = forward(params, batch["images"], cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}

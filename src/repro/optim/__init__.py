@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (OptConfig, init_opt_state, opt_update,
+                                    cosine_schedule)

@@ -1,0 +1,87 @@
+"""Pure-JAX optimizers: LAMB (the paper's optimizer) and AdamW, plus the
+cosine-annealing schedule used by the paper's two-phase QAT recipe."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "lamb"            # "lamb" | "adamw"
+    lr: float = 5e-4              # paper: base LR 5e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-6
+    weight_decay: float = 0.0     # paper: LAMB without weight decay
+    grad_clip: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.01
+
+
+def cosine_schedule(step, cfg: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init_opt_state(params):
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def opt_update(params, grads, state, cfg: OptConfig):
+    """One optimizer step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(step, cfg)
+    gnorm = _global_norm(grads)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    c1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        u = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        if cfg.kind == "lamb":
+            # No reshape(-1): flattening a sharded tensor makes GSPMD
+            # all-gather it (measured 6x120 GiB/step on MoE training).
+            # Axis-wise reduction keeps the norm a partial-sum + tiny psum.
+            wn = jnp.sqrt(jnp.sum(jnp.square(p.astype(jnp.float32))))
+            un = jnp.sqrt(jnp.sum(jnp.square(u)))
+            trust = jnp.where((wn > 0) & (un > 0), wn / un, 1.0)
+            u = u * trust
+        new_p = p.astype(jnp.float32) - lr * u
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_state = {"mu": jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+                 "nu": jax.tree_util.tree_unflatten(tdef, [o[2] for o in out]),
+                 "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,29 @@
+"""Preemption handling: SIGTERM -> checkpoint-and-exit.
+
+Cloud TPU/TRN fleets deliver a grace signal before eviction; the training
+loop polls :func:`should_stop` each step and writes a final checkpoint
+before exiting with a distinct code so the launcher restarts cleanly.
+"""
+from __future__ import annotations
+
+import signal
+
+PREEMPTED_EXIT_CODE = 42
+_FLAG = {"stop": False}
+
+
+def _handler(signum, frame):
+    _FLAG["stop"] = True
+
+
+def install():
+    signal.signal(signal.SIGTERM, _handler)
+    signal.signal(signal.SIGUSR1, _handler)
+
+
+def should_stop() -> bool:
+    return _FLAG["stop"]
+
+
+def reset():
+    _FLAG["stop"] = False

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests must see exactly 1 CPU device (the dry-run pins 512 in its own
+# process); make sure nothing leaks in.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks

@@ -1,0 +1,69 @@
+"""Checkpoint manager: atomicity, keep-k, bit-exact restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import checkpoint
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"lin": {"w": jax.random.normal(k, (8, 4)),
+                               "b": jnp.zeros((4,))}},
+            "opt": {"mu": {"lin": {"w": jnp.ones((8, 4))}},
+                    "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    checkpoint.save(d, 10, tree)
+    restored, step = checkpoint.restore(d, tree)
+    assert step == 10
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_empty_dir(tmp_path):
+    restored, step = checkpoint.restore(str(tmp_path), _tree())
+    assert restored is None and step == -1
+
+
+def test_keep_k_pruning(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        checkpoint.save(d, s, _tree(s), keep=2)
+    assert checkpoint.available_steps(d) == [4, 5]
+
+
+def test_partial_write_is_invisible(tmp_path):
+    """A .tmp dir (crash mid-write) must not be seen as a checkpoint."""
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _tree())
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    with open(os.path.join(d, "step_00000002.tmp", "proc_0.npz"), "w") as f:
+        f.write("garbage")
+    restored, step = checkpoint.restore(d, _tree())
+    assert step == 1
+
+
+def test_latest_wins(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _tree(1))
+    checkpoint.save(d, 9, _tree(9))
+    _, step = checkpoint.restore(d, _tree())
+    assert step == 9
+
+
+def test_restore_specific_step(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _tree(1), keep=5)
+    checkpoint.save(d, 2, _tree(2), keep=5)
+    t1, s1 = checkpoint.restore(d, _tree(), step=1)
+    ref = _tree(1)
+    np.testing.assert_array_equal(
+        np.asarray(t1["params"]["lin"]["w"]),
+        np.asarray(ref["params"]["lin"]["w"]))

@@ -1,0 +1,61 @@
+"""Data pipeline: determinism, restartability, shard disjointness."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import (DataConfig, host_shard_iterator, image_batch,
+                                  lm_batch)
+
+CFG = DataConfig(vocab=1000, seq_len=64, global_batch=8)
+
+
+def test_deterministic_per_step():
+    a = lm_batch(CFG, 5)
+    b = lm_batch(CFG, 5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_steps_differ():
+    a = lm_batch(CFG, 1)
+    b = lm_batch(CFG, 2)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(b["tokens"]))
+
+
+def test_shards_disjoint_and_sized():
+    a = lm_batch(CFG, 3, shard=0, n_shards=4)
+    b = lm_batch(CFG, 3, shard=1, n_shards=4)
+    assert a["tokens"].shape == (2, 64)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(b["tokens"]))
+
+
+def test_labels_are_next_tokens():
+    a = lm_batch(CFG, 0)
+    # tokens[t+1] == labels[t] by construction
+    np.testing.assert_array_equal(np.asarray(a["tokens"][:, 1:]),
+                                  np.asarray(a["labels"][:, :-1]))
+
+
+def test_iterator_restart_replays():
+    it1 = host_shard_iterator(CFG, 10)
+    it2 = host_shard_iterator(CFG, 10)
+    for _ in range(3):
+        a, b = next(it1), next(it2)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+
+
+def test_image_batch_learnable_structure():
+    a = image_batch(0, batch=64, img=16)
+    assert a["images"].shape == (64, 16, 16, 3)
+    assert float(jnp.max(jnp.abs(a["images"]))) <= 1.0
+    # class templates separate means: same-class pairs closer than diff-class
+    imgs, labels = np.asarray(a["images"]), np.asarray(a["labels"])
+    same, diff = [], []
+    for i in range(20):
+        for j in range(i + 1, 20):
+            d = np.mean((imgs[i] - imgs[j]) ** 2)
+            (same if labels[i] == labels[j] else diff).append(d)
+    if same and diff:
+        assert np.mean(same) < np.mean(diff)

@@ -1,0 +1,78 @@
+"""HLO analysis parsers (collective accounting drives the §Roofline)."""
+import textwrap
+
+from repro.launch import hlo_analysis as H
+
+SIMPLE = textwrap.dedent("""\
+    HloModule jit_f
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    ENTRY %main.1 (p0: f32[8,32]) {
+      %p0 = f32[8,32]{1,0} parameter(0)
+      %ar = f32[8,32]{1,0} all-reduce(%p0), to_apply=%add
+      %ag = bf16[16,32]{1,0} all-gather(%conv), dimensions={0}
+      %done = f32[8,32]{1,0} all-reduce-done(%start)
+      ROOT %t = f32[8,32]{1,0} copy(%ar)
+    }
+    """)
+
+LOOPED = textwrap.dedent("""\
+    HloModule jit_g
+
+    %cond (s: (s32[], f32[4])) -> pred[] {
+      %c = s32[] constant(7)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %body (s: (s32[], f32[4])) -> (s32[], f32[4]) {
+      %x = f32[4]{0} all-gather(%g), dimensions={0}
+      ROOT %out = (s32[], f32[4]) tuple(%i, %x)
+    }
+
+    ENTRY %main.2 (p0: f32[4]) {
+      %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+      %ar = f32[2]{0} all-reduce(%z), to_apply=%add
+      ROOT %r = f32[4] copy(%gte)
+    }
+    """)
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[8,32]{1,0}") == 8 * 32 * 4
+    assert H._shape_bytes("bf16[16]") == 32
+    assert H._shape_bytes("(f32[2], s8[4])") == 8 + 4
+    assert H._shape_bytes("pred[]") == 1
+
+
+def test_collective_bytes_flat():
+    out = H.collective_bytes(SIMPLE)
+    assert out["all-reduce"] == 8 * 32 * 4          # -done line skipped
+    assert out["all-gather"] == 16 * 32 * 2
+
+
+def test_collective_bytes_scaled_loops():
+    out = H.collective_bytes_scaled(LOOPED)
+    assert out["all-gather"] == 7 * 4 * 4           # body x trip count
+    assert out["all-reduce"] == 2 * 4
+
+
+def test_roofline_terms():
+    t = H.roofline_terms(197e12, 819e9, 50e9)       # 1s of each resource
+    assert abs(t["compute_s"] - 1.0) < 1e-6
+    assert abs(t["memory_s"] - 1.0) < 1e-6
+    assert abs(t["collective_s"] - 1.0) < 1e-6
+    t2 = H.roofline_terms(197e12, 0, 0, int8_frac=1.0)
+    assert abs(t2["compute_s"] - 0.5) < 1e-6        # int8 runs 2x peak
+    assert t2["bottleneck"] == "compute_s"
+    assert t2["roofline_fraction"] == 1.0
+
+
+def test_collective_report_attribution():
+    txt = SIMPLE.replace(
+        "all-reduce(%p0)",
+        'all-reduce(%p0), metadata={op_name="jit(f)/wo/dot_general"}')
+    rep = H.collective_report(txt)
+    assert any("wo/dot_general" in src for _, _, src in rep)

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, output shapes + no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, smoke_config, is_encdec
+from repro.core.api import QuantConfig, integerize_params
+from repro.models import encdec, lm, vit
+
+LM_ARCHS = [a for a in ARCHS if a not in ("whisper-large-v3", "deit-s")]
+
+
+def _lm_batch(cfg, key, seq=24):
+    toks = jax.random.randint(key, (2, seq), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "patch":
+        batch["patches"] = jax.random.normal(
+            key, (2, cfg.n_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_arch_train_step(arch):
+    cfg = smoke_config(arch).replace(
+        quant=QuantConfig(w_bits=4, a_bits=8, attn_bits=7, mode="fake"))
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    batch = _lm_batch(cfg, key)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.lm_loss(p, batch, cfg), has_aux=True)(params)
+    assert jnp.isfinite(loss), arch
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), arch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_arch_integerized_serve(arch):
+    cfg_f = smoke_config(arch)
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    cfg = cfg_f.replace(quant=qc)
+    key = jax.random.PRNGKey(0)
+    params = integerize_params(lm.init_params(key, cfg_f), qc)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab)}
+    if cfg.frontend == "patch":
+        batch["patches"] = jax.random.normal(
+            key, (2, cfg.n_patches, cfg.d_model), jnp.float32)
+    logits, cache = lm.prefill(params, batch, cfg, max_len=20)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = lm.decode_step(params, tok, cache, cfg)
+    assert logits2.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2))), arch
+    expected_pos = 16 + (cfg.n_patches if cfg.frontend == "patch" else 0) + 1
+    assert int(cache["pos"]) == expected_pos
+
+
+def test_whisper_smoke():
+    cfg = smoke_config("whisper-large-v3")
+    key = jax.random.PRNGKey(0)
+    params = encdec.init_params(key, cfg)
+    batch = {"frames": jax.random.normal(key, (2, cfg.n_audio_ctx,
+                                               cfg.d_model)),
+             "tokens": jax.random.randint(key, (2, 12), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (2, 12), 0, cfg.vocab)}
+    loss, _ = encdec.loss_fn(params, batch, cfg)
+    assert jnp.isfinite(loss)
+    logits, cache = encdec.prefill(params, batch, cfg, max_len=16)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, _ = encdec.decode_step(params, tok, cache, cfg)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_deit_smoke():
+    cfg = smoke_config("deit-s")
+    key = jax.random.PRNGKey(0)
+    params = vit.init_params(key, cfg)
+    batch = {"images": jax.random.normal(key, (4, cfg.img_size, cfg.img_size,
+                                               3)),
+             "labels": jnp.array([0, 1, 2, 3])}
+    loss, metrics = vit.loss_fn(params, batch, cfg)
+    assert jnp.isfinite(loss)
+    logits = vit.forward(params, batch["images"], cfg)
+    assert logits.shape == (4, cfg.n_classes)
+
+
+def test_full_configs_match_assignment():
+    """The exact layer/width/head/vocab numbers from the assignment table."""
+    from repro.configs.registry import get_config
+    expect = {
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "mamba2-130m": (24, 768, 1, 1, 0, 50280),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.kv_heads, c.d_ff,
+                c.vocab) == (L, d, h, kv, ff, v), arch
+    w = get_config("whisper-large-v3")
+    assert (w.n_enc_layers, w.n_dec_layers, w.d_model, w.n_heads, w.d_ff,
+            w.vocab) == (32, 32, 1280, 20, 5120, 51866)
+    m = get_config("mamba2-130m")
+    assert m.ssd.d_state == 128

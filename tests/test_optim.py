@@ -1,0 +1,64 @@
+"""LAMB/AdamW + cosine schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import OptConfig, cosine_schedule, init_opt_state, opt_update
+
+
+@pytest.mark.parametrize("kind", ["lamb", "adamw"])
+def test_optimizer_descends_quadratic(kind):
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"lin": {"w": jnp.zeros((3,))}}
+    cfg = OptConfig(kind=kind, lr=0.1, warmup_steps=0, total_steps=200,
+                    grad_clip=None)
+    state = init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum((p["lin"]["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt_update(params, g, state, cfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_lamb_trust_ratio_scale_invariance():
+    """LAMB normalizes per-layer: update magnitude ~ ||w||, not ||g||."""
+    cfg = OptConfig(kind="lamb", lr=0.1, warmup_steps=0, grad_clip=None)
+    for scale in (1.0, 1000.0):
+        params = {"a": {"w": jnp.ones((4,)) * 2.0}}
+        state = init_opt_state(params)
+        g = {"a": {"w": jnp.ones((4,)) * scale}}
+        new, _, _ = opt_update(params, g, state, cfg)
+        delta = float(jnp.linalg.norm(new["a"]["w"] - params["a"]["w"]))
+        # trust ratio makes the step ||w|| * lr regardless of grad scale
+        np.testing.assert_allclose(delta, 0.1 * 4.0, rtol=1e-4)
+
+
+def test_cosine_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    assert float(cosine_schedule(0, cfg)) == 0.0
+    np.testing.assert_allclose(float(cosine_schedule(10, cfg)), 1e-3,
+                               rtol=1e-5)
+    end = float(cosine_schedule(100, cfg))
+    np.testing.assert_allclose(end, 1e-4, rtol=1e-4)
+    mid = float(cosine_schedule(55, cfg))
+    assert end < mid < 1e-3
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros((4,))}
+    cfg = OptConfig(kind="adamw", lr=0.0, grad_clip=1.0, warmup_steps=0)
+    state = init_opt_state(params)
+    _, _, m = opt_update(params, {"w": jnp.full((4,), 100.0)}, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_opt_state_dtypes_f32():
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = init_opt_state(params)
+    assert state["mu"]["w"].dtype == jnp.float32   # master stats in f32

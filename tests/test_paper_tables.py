@@ -1,0 +1,41 @@
+"""Paper-number reproduction checks (Tables I & II, Eq. 4)."""
+import pytest
+
+from benchmarks import table1_power, table2_comparison
+
+
+def test_table1_pe_and_mac_counts_match_paper():
+    out, claim = table1_power.run()
+    checked = 0
+    for r, match in out:
+        if r["block"] in table1_power.PAPER_TABLE1:
+            assert match == "MATCH", (r, match)
+            checked += 1
+    assert checked == 5
+    assert claim        # int matmul per-PE power < fp blocks per-PE
+
+
+def test_table2_sizes_match_paper():
+    rows = table2_comparison.rows()
+    ours2 = next(r for r in rows if r["model"] == "Ours 2-bit")
+    ours3 = next(r for r in rows if r["model"] == "Ours 3-bit")
+    # paper: 21.8M params, 5.8MB @2b, 8.3MB @3b (ours counts the CIFAR head)
+    assert abs(ours2["params_m"] - 21.8) / 21.8 < 0.03
+    assert abs(ours2["size_mb"] - 5.8) / 5.8 < 0.05
+    assert abs(ours3["size_mb"] - 8.3) / 8.3 < 0.06
+    assert ours2["multiplier"] == "2-bit"
+
+
+def test_deit_token_count_is_198():
+    from repro.configs.deit_s import CONFIG
+    assert CONFIG.n_tokens == 198          # the N behind Table I's 39204 PEs
+    assert CONFIG.n_tokens ** 2 == 39204
+
+
+def test_eq4_error_bound():
+    from benchmarks.fig_softmax_error import run
+    rows = dict(run())
+    assert rows["exp2_shift_max_rel_err"] < 0.0615
+    # prob-bit sweep: error decreases monotonically with bits
+    errs = [rows[f"attn_out_rel_err_{b}b_probs"] for b in (2, 3, 4, 7)]
+    assert errs == sorted(errs, reverse=True)

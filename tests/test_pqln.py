@@ -1,0 +1,66 @@
+"""Post-quantized LayerNorm (Fig. 5 / Eq. 5) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pqln
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_comparator_equals_direct(seed, bits):
+    """Division/sqrt-free comparator (Fig. 5b) == rsqrt formulation."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (6, 32)) * 2
+    gamma = jnp.abs(jax.random.normal(k2, (32,))) + 0.3
+    beta = jax.random.normal(k3, (32,)) * 0.2
+    delta = jnp.float32(0.3)
+    a = pqln.pq_layernorm(x, gamma, beta, bits, delta)
+    b = pqln.pq_layernorm_comparator(x, gamma, beta, bits, delta)
+    diff = np.abs(np.asarray(a, np.int32) - np.asarray(b, np.int32))
+    assert diff.max() <= 1            # ties only
+    assert (diff > 0).mean() < 0.01
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(4, 64))
+def test_welford_equals_twopass(seed, n):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, n)) * 5
+    m1 = pqln.moments_twopass(x)
+    m2 = pqln.moments_welford(x)
+    np.testing.assert_allclose(np.asarray(m1.mean), np.asarray(m2.mean),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m1.var), np.asarray(m2.var),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.1, 100.0))
+def test_per_tensor_scale_cancels(seed, c):
+    """The absorption trick: LN(c*x) == LN(x) for per-tensor c (so the
+    reordered linear's dx_bar never needs to be applied before LN)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 16))
+    g = jnp.ones((16,))
+    b = jnp.zeros((16,))
+    a = pqln.pq_layernorm(x, g, b, 4, jnp.float32(0.25))
+    bq = pqln.pq_layernorm(x * c, g, b, 4, jnp.float32(0.25))
+    assert bool(jnp.all(a == bq))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.1, 100.0))
+def test_rmsnorm_scale_invariance(seed, c):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 16))
+    g = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed + 1), (16,))) + 0.1
+    a = pqln.rmsnorm(x, g)
+    b = pqln.rmsnorm(x * c, g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=1e-5)
+
+
+def test_pq_rmsnorm_codes_in_range():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 10
+    g = jnp.ones((64,))
+    q = pqln.pq_rmsnorm(x, g, 3, jnp.float32(0.5))
+    assert int(q.min()) >= -4 and int(q.max()) <= 3

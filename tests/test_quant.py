@@ -1,0 +1,79 @@
+"""Quantizer unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("unsigned", [False, True])
+def test_qrange(bits, unsigned):
+    qmin, qmax = quant.qrange(bits, unsigned=unsigned)
+    assert qmax - qmin == (1 << bits) - 1
+    if unsigned:
+        assert qmin == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 64), st.floats(0.1, 100.0))
+def test_quant_roundtrip_error_bound(bits, n, amp):
+    """|dequant(quantize(x)) - x| <= delta/2 for in-range x (property)."""
+    x = np.linspace(-amp, amp, n, dtype=np.float32)
+    delta = quant.absmax_scale(jnp.asarray(x), bits)
+    q = quant.quantize(jnp.asarray(x), delta, bits)
+    err = np.abs(np.asarray(quant.dequantize(q, delta)) - x)
+    assert err.max() <= float(delta) / 2 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8), st.integers(1, 16))
+def test_pack_unpack_int4_roundtrip(seed, rows, half_cols):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (rows, 2 * half_cols),
+                           -8, 8).astype(jnp.int8)
+    packed = quant.pack_int4(q)
+    assert packed.shape == (rows, half_cols)
+    assert bool(jnp.all(quant.unpack_int4(packed) == q))
+
+
+def test_unsigned_storage_dtype():
+    x = jnp.linspace(0, 1, 16)
+    q = quant.quantize(x, jnp.float32(1 / 255), 8, unsigned=True)
+    assert q.dtype == jnp.uint8
+    assert int(q.max()) == 255  # would wrap negative in int8
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.linspace(-2, 2, 21)
+    delta = jnp.float32(0.25)
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant(x, delta, 3)))(x)
+    # Pass-through inside the clip range, zero outside.
+    qmin, qmax = quant.qrange(3)
+    inside = (x / delta >= qmin) & (x / delta <= qmax)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(inside, np.float32))
+
+
+def test_fake_quant_lsq_delta_gradient_sign():
+    # Larger delta -> coarser grid; gradient should be finite and nonzero.
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    gd = jax.grad(lambda d: jnp.sum(quant.fake_quant(x, d, 4) ** 2))(
+        jnp.float32(0.1))
+    assert np.isfinite(float(gd)) and abs(float(gd)) > 0
+
+
+def test_per_channel_scale_shapes():
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    d = quant.absmax_scale(w, 4, axis=1)
+    assert d.shape == (16, 1)
+    q = quant.quantize(w, d, 4)
+    assert int(jnp.max(jnp.abs(q))) <= 7
+
+
+def test_qtensor_pytree():
+    qt = quant.quantize_tensor(jax.random.normal(jax.random.PRNGKey(0),
+                                                 (4, 4)), 8)
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert bool(jnp.all(qt2.q == qt.q)) and qt2.bits == 8

@@ -1,0 +1,38 @@
+"""Watchdog straggler detection + preemption flag mechanics."""
+import time
+
+from repro.runtime.preemption import (_handler, install, reset, should_stop)
+from repro.runtime.watchdog import Watchdog
+
+
+def test_watchdog_detects_injected_straggler():
+    fired = []
+    wd = Watchdog(threshold=3.0, patience=2,
+                  on_straggler=lambda dt, ema: fired.append((dt, ema)))
+    for i in range(6):                       # healthy steps ~2ms
+        wd.start(); time.sleep(0.002); wd.stop()
+    for i in range(2):                       # injected straggler ~40ms
+        wd.start(); time.sleep(0.04); wd.stop()
+    assert wd.fired == 1 and len(fired) == 1
+    dt, ema = fired[0]
+    assert dt > 3.0 * ema
+
+
+def test_watchdog_recovers():
+    wd = Watchdog(threshold=3.0, patience=2)
+    for _ in range(5):
+        wd.start(); time.sleep(0.002); wd.stop()
+    wd.start(); time.sleep(0.03); slow = wd.stop()
+    assert slow                              # flagged but not fired yet
+    for _ in range(3):
+        wd.start(); time.sleep(0.002); wd.stop()
+    assert wd.fired == 0                     # single blip, patience resets
+
+
+def test_preemption_flag():
+    reset()
+    assert not should_stop()
+    _handler(None, None)
+    assert should_stop()
+    reset()
+    assert not should_stop()

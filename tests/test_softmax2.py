@@ -1,0 +1,72 @@
+"""Base-2 shift softmax (Eq. 3-4) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.softmax2 import (exp2_shift, exp_shift, quantize_probs,
+                                 quantize_probs_comparator, softmax2,
+                                 softmax_ref)
+
+MAX_REL = 2.0 ** (1 / np.log(2) - 1) * np.log(2) * np.e ** 0  # analytic bound
+
+
+def test_exp2_shift_relative_error_bound():
+    """(1+r)*2^floor(x) vs 2^x: max relative error is 6.148% at r=1/ln2-1."""
+    x = jnp.linspace(-20, 20, 100_001)
+    approx = exp2_shift(x)
+    exact = jnp.exp2(x)
+    rel = np.asarray(jnp.abs(approx - exact) / exact)
+    assert rel.max() <= 0.0615
+    # and the bound is achieved somewhere
+    assert rel.max() >= 0.0610
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.1, 8.0))
+def test_softmax2_close_to_exact(seed, spread):
+    l = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * spread
+    s2 = softmax2(l)
+    sr = softmax_ref(l)
+    # Rows sum to 1 exactly; pointwise error bounded by ~2x the exp rel err.
+    np.testing.assert_allclose(np.asarray(jnp.sum(s2, -1)), 1.0, rtol=1e-5)
+    assert float(jnp.max(jnp.abs(s2 - sr))) < 0.13
+
+
+def test_stable_equals_unstable():
+    """Integer max subtraction commutes exactly with the shift-exp."""
+    l = jax.random.normal(jax.random.PRNGKey(0), (8, 128)) * 3
+    a = softmax2(l, stable=True)
+    b = softmax2(l, stable=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_stable_handles_large_logits():
+    l = jnp.array([[500.0, 400.0, -500.0]])
+    out = softmax2(l)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(out[0, 0]) > 0.99
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 7))
+def test_probs_quantizer_division_equals_comparator(seed, bits):
+    """Paper §IV-B: Sigma-scaled comparator thresholds == division form."""
+    e = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (8, 32))) * 3
+    sigma = jnp.sum(e, -1, keepdims=True)
+    delta = jnp.float32(1.0 / ((1 << bits) - 1))
+    q_div = quantize_probs(e, sigma, bits, delta)
+    q_cmp = quantize_probs_comparator(e, sigma[..., 0], bits, delta)
+    # Ties at exact .5 grid points may differ by round-half-to-even; allow
+    # <=1 code difference on <1% of entries.
+    diff = np.abs(np.asarray(q_div, np.int32) - np.asarray(q_cmp, np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.01
+
+
+def test_exp_shift_matches_eq4():
+    x = jnp.linspace(-5, 5, 101)
+    np.testing.assert_allclose(np.asarray(exp_shift(x)),
+                               np.asarray(exp2_shift(x * 1.4426950408889634)),
+                               rtol=1e-6)
