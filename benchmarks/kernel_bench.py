@@ -4,9 +4,17 @@ CPU container: wall-clock of the XLA integer paths (relative CPU numbers,
 useful for regression tracking) plus the ANALYTIC v5e roofline time per
 kernel call (bytes & MACs are exact functions of shape — this is the number
 that matters for the TPU target).
+
+``--json [PATH]`` additionally writes ``BENCH_kernels.json`` (default name)
+with per-kernel timings and the attention kernel-design comparison
+(two-pass vs single-pass analytic MXU MACs / HBM bytes), so the perf
+trajectory is tracked from this PR onward.  ``--quick`` restricts to the
+smallest shapes (CI-sized run).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -15,6 +23,7 @@ import jax.numpy as jnp
 from repro.core import quant
 from repro.core.integerize import int_linear, make_qlinear
 from repro.kernels import ref as kref
+from repro.kernels.int_attention import attention_macs
 
 PEAK_INT8 = 394e12
 PEAK_BF16 = 197e12
@@ -22,8 +31,9 @@ HBM = 819e9
 
 
 def _time(f, *args, n=20):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    # Warmup/compile: evaluate ONCE (a second eval here used to skew the
+    # denominator-free first measurement).
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         out = f(*args)
@@ -35,15 +45,39 @@ def qmatmul_analytic(m, n, k, w_bits=8):
     macs = m * n * k
     bytes_ = m * k + n * k * (w_bits / 8) + m * n * 4
     return {"t_compute_us": macs * 2 / PEAK_INT8 * 1e6,
-            "t_memory_us": bytes_ / HBM * 1e6}
+            "t_memory_us": bytes_ / HBM * 1e6,
+            "macs": macs}
 
 
-def main():
+def attention_design_analytic(h, s, d, *, bq=256):
+    """Two-pass vs single-pass fused kernel: exact per-call MXU MACs and
+    K/V-tile HBM traffic (K re-read once per query block in each pass)."""
+    nq = -(-s // bq)
+    kv_bytes = h * s * d                       # one int8 K (or V) sweep
+    return {
+        "h": h, "s": s, "d": d,
+        "two_pass_macs": attention_macs(h, s, s, d, design="two_pass"),
+        "single_pass_macs": attention_macs(h, s, s, d, design="single"),
+        "two_pass_kv_hbm_bytes": nq * (2 * kv_bytes + kv_bytes),  # K,K,V
+        "single_pass_kv_hbm_bytes": nq * 2 * kv_bytes,            # K,V
+        "v5e_two_pass_compute_us":
+            attention_macs(h, s, s, d, design="two_pass")
+            * 2 / PEAK_INT8 * 1e6,
+        "v5e_single_pass_compute_us":
+            attention_macs(h, s, s, d, design="single")
+            * 2 / PEAK_INT8 * 1e6,
+    }
+
+
+def run(quick=False):
     key = jax.random.PRNGKey(0)
     rows = []
 
     # Reordered integer linear vs float linear (XLA paths, CPU).
-    for m, n, k in [(256, 1024, 1024), (1024, 4096, 4096)]:
+    shapes = [(256, 1024, 1024)]
+    if not quick:
+        shapes.append((1024, 4096, 4096))
+    for m, n, k in shapes:
         x = jax.random.normal(key, (m, k))
         w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.02
         p = make_qlinear(w.T, None, 8)
@@ -53,30 +87,56 @@ def main():
         us_int = _time(f_int, xq, p)
         us_fp = _time(f_fp, x, w)
         ana = qmatmul_analytic(m, n, k)
-        rows.append((f"int_linear_{m}x{n}x{k}", us_int,
-                     f"fp32={us_fp:.0f}us v5e_compute={ana['t_compute_us']:.1f}us "
-                     f"v5e_mem={ana['t_memory_us']:.1f}us"))
+        rows.append({"name": f"int_linear_{m}x{n}x{k}", "wall_us": us_int,
+                     "wall_us_fp32": us_fp, **ana})
 
     # pq-layernorm fused vs LN-then-quant (XLA, CPU).
     x = jax.random.normal(key, (4096, 1024))
     g = jnp.ones((1024,))
     b = jnp.zeros((1024,))
     f_fused = jax.jit(lambda x: kref.pq_layernorm_ref(x, g, b, 0.05, bits=4))
-    us_ln = _time(f_fused, x)
-    rows.append(("pq_layernorm_4096x1024", us_ln,
-                 f"v5e_mem={(x.size * 4 + x.size) / HBM * 1e6:.1f}us"))
+    rows.append({"name": "pq_layernorm_4096x1024",
+                 "wall_us": _time(f_fused, x),
+                 "t_memory_us": (x.size * 4 + x.size) / HBM * 1e6})
 
-    # int attention (XLA ref path).
+    # int attention (XLA ref path) + kernel-design analytics.
     h, s, d = 4, 1024, 64
     qq = jax.random.randint(key, (h, s, d), -8, 8).astype(jnp.int8)
     f_attn = jax.jit(lambda q: kref.int_attention_ref(q, q, q, 0.002, 0.01))
-    us_attn = _time(f_attn, qq, n=5)
-    macs = 2 * h * s * s * d
-    rows.append((f"int_attention_h{h}_s{s}", us_attn,
-                 f"v5e_compute={macs * 2 / PEAK_INT8 * 1e6:.1f}us"))
+    us_attn = _time(f_attn, qq, n=2 if quick else 5)
+    design = attention_design_analytic(h, s, d)
+    rows.append({"name": f"int_attention_h{h}_s{s}", "wall_us": us_attn,
+                 "macs": attention_macs(h, s, s, d),
+                 "t_compute_us": design["v5e_single_pass_compute_us"]})
+    return rows, design
 
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="write results to JSON (default BENCH_kernels.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest shapes only (CI-sized)")
+    args = ap.parse_args(argv)
+
+    rows, design = run(quick=args.quick)
+    for r in rows:
+        derived = " ".join(f"{k}={v:.1f}" for k, v in r.items()
+                           if k not in ("name", "wall_us", "macs")
+                           and isinstance(v, float))
+        print(f"{r['name']},{r['wall_us']:.1f},{derived}")
+    print(f"attention_design,s={design['s']},"
+          f"two_pass_macs={design['two_pass_macs']},"
+          f"single_pass_macs={design['single_pass_macs']}")
+
+    if args.json:
+        payload = {"kernels": rows, "attention_design": design,
+                   "device": jax.devices()[0].platform}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    return rows, design
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ def main() -> None:
     print("\n== Eq.4 softmax approximation error ==")
     fig_softmax_error.main()
     print("\n== Kernel micro-bench (name,us_per_call,derived) ==")
-    kernel_bench.main()
+    kernel_bench.main([])          # own argv; run.py flags don't leak in
     res = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun.json")
     if os.path.exists(res):

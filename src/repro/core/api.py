@@ -41,6 +41,8 @@ class QuantConfig:
     softmax: str = "base2"      # "base2" (paper Eq.4) | "exact" (ablation)
     quantize_embeddings: bool = True   # int8 embedding storage in "int" mode
     pack_weights: bool = False  # pack 2x4b per byte in HBM (kernels unpack)
+    backend: Optional[str] = None      # "xla" | "pallas" | None (process
+    #                                    default: see kernels.dispatch)
 
     def replace(self, **kw) -> "QuantConfig":
         return dataclasses.replace(self, **kw)
@@ -84,6 +86,10 @@ def dense(x: jax.Array, p: dict, cfg: Optional[QuantConfig], *,
                 and rules.mesh is not None
                 and "model" in rules.mesh.axis_names):
             return _int_row_parallel(x, p, cfg, rules)
+        from repro.kernels.dispatch import maybe_qlinear
+        y = maybe_qlinear(x, p, cfg)       # Pallas backend; None -> XLA
+        if y is not None:
+            return y
         xq = quant.quantize_tensor(x, cfg.a_bits)
         # Keep the epilogue in f32 but hand activations back in the compute
         # dtype: the TP all-reduce after row-parallel layers otherwise moves

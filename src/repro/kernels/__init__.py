@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the integerized serving graph.
+
+Layout:
+
+- ``qmatmul.py``        reordered int8 matmul, fused dequant epilogue
+                        (+ nibble-packed int4 weight variant)
+- ``int_attention.py``  integer attention with embedded base-2 softmax:
+                        two-pass baseline and the single-pass fused kernel
+- ``pq_layernorm.py``   LayerNorm fused with the re-quantizer
+- ``ref.py``            pure-jnp oracles (exact intended semantics)
+- ``ops.py``            QTensor-typed wrappers (tests / benchmarks)
+- ``dispatch.py``       backend selection: routes ``mode="int"`` model
+                        graphs onto these kernels (``REPRO_KERNEL_BACKEND``
+                        = "xla" | "pallas", ``QuantConfig.backend``
+                        override, per-op shape-policy fallback)
+
+Environment flags:
+
+- ``REPRO_KERNEL_BACKEND``   process-default backend ("xla" off-TPU)
+- ``REPRO_PALLAS_COMPILED``  "1" = compile for the MXU (real TPU);
+                             otherwise kernels run in interpret mode
+"""

@@ -1,0 +1,275 @@
+"""Kernel backend dispatch: route the ``mode="int"`` serving graph onto
+the Pallas kernels.
+
+The paper's reordered integer contraction exists twice in this repo: as XLA
+einsums inside the model graph (``core.api.dense`` / ``layers.attention``)
+and as Pallas TPU kernels (``kernels.qmatmul`` / ``kernels.int_attention``).
+This module is the seam between them: the model graph calls
+:func:`maybe_qlinear` / :func:`maybe_attention`, which either lower onto the
+Pallas kernels (ND->2D flattening, packed-int4 weights, GQA/batch folding,
+block-size heuristics) or return ``None`` to signal "use the XLA path".
+
+Backend selection (checked at trace time, so switching requires a re-trace):
+
+1. ``QuantConfig.backend`` — per-model override ("xla" | "pallas" | None);
+2. ``REPRO_KERNEL_BACKEND`` env var / :func:`set_backend` /
+   :func:`use_backend` — process-wide default (initially "xla");
+3. shape policy — even under "pallas", ops the kernels cannot express
+   (3D weight stacks, ring-buffer key positions, decode offsets, >7-bit
+   prob grids) fall back to XLA per call site.
+
+``REPRO_PALLAS_COMPILED=1`` runs the kernels compiled on a real TPU;
+otherwise they execute in interpret mode (correct everywhere, fast
+nowhere — which is why "xla" stays the default off-TPU).
+
+Parity with the XLA int path is exact (<= 1e-5) whenever one key block
+covers the row — ``attention_blocks`` prefers that and achieves it for
+Sk <= 4096 at default budget.  Beyond that the fused kernel streams codes
+on the running-m grid (see kernels/int_attention.py): outputs then differ
+from the full-row XLA grid by at most ~one prob code on early keys — the
+same order as the quantization error itself, and bit-identical to the
+``int_attention_ref_streamed`` oracle.
+
+:data:`STATS` counts pallas dispatches and XLA fallbacks per op at trace
+time; tests assert on it to prove the serving graph really runs the
+kernels.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.softmax2 import LOG2E
+from repro.kernels.int_attention import int_attention_fused
+from repro.kernels.qmatmul import qmatmul
+
+_VALID = ("xla", "pallas")
+
+
+def _checked(name: str, source: str) -> str:
+    if name not in _VALID:
+        raise ValueError(f"unknown kernel backend {name!r} from {source}; "
+                         f"expected one of {_VALID}")
+    return name
+
+
+_backend = [_checked(os.environ.get("REPRO_KERNEL_BACKEND", "xla"),
+                     "REPRO_KERNEL_BACKEND")]
+
+STATS = {"qlinear_pallas": 0, "qlinear_xla": 0,
+         "attention_pallas": 0, "attention_xla": 0}
+
+
+def reset_stats():
+    for k in STATS:
+        STATS[k] = 0
+
+
+def get_backend() -> str:
+    return _backend[-1]
+
+
+def set_backend(name: str):
+    _backend[-1] = _checked(name, "set_backend")
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    _backend.append(_checked(name, "use_backend"))
+    try:
+        yield
+    finally:
+        _backend.pop()
+
+
+def resolve_backend(cfg) -> str:
+    b = getattr(cfg, "backend", None)
+    if b is None:
+        return get_backend()
+    return _checked(b, "QuantConfig.backend")
+
+
+def interpret_default() -> bool:
+    """False only when REPRO_PALLAS_COMPILED=1 (compiled MXU path on TPU)."""
+    return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+# ---------------------------------------------------------------------------
+# Block-size heuristics (shape + VMEM budget instead of hard-coded tiles)
+# ---------------------------------------------------------------------------
+
+# Usable VMEM per core after double buffering; ~16MB physical on v5e.
+VMEM_BUDGET = 6 * 2 ** 20
+_LANE = 128                       # MXU lane width; block dims align to it
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def qmatmul_blocks(m: int, n: int, k: int, *,
+                   budget: int = VMEM_BUDGET) -> tuple[int, int, int]:
+    """(bm, bn, bk) for an (M,K) x (N,K)^T int8 matmul.
+
+    Tile VMEM ~ bm*bk + bn*bk (int8 operands) + 8*bm*bn (int32 acc + f32
+    out).  Prefer covering K in one step (single-shot accumulator, no
+    revisits of the output tile), then grow bm/bn toward the MXU sweet spot.
+    """
+    def _halve(x):                       # stay 128-aligned while shrinking
+        return max(_LANE, _round_up(x // 2, _LANE))
+
+    bk = min(_round_up(k, _LANE), 2048)
+    bm = min(_round_up(m, _LANE), 256)
+    bn = min(_round_up(n, _LANE), 256)
+    while bm * bk + bn * bk + 8 * bm * bn > budget and bk > _LANE:
+        bk = _halve(bk)
+    while bm * bk + bn * bk + 8 * bm * bn > budget and max(bm, bn) > _LANE:
+        if bm >= bn:
+            bm = _halve(bm)
+        else:
+            bn = _halve(bn)
+    return bm, bn, bk
+
+
+def attention_blocks(sq: int, sk: int, d: int, *,
+                     budget: int = VMEM_BUDGET) -> tuple[int, int]:
+    """(bq, bk) for the fused attention kernel.
+
+    Tile VMEM ~ (bq + 2*bk)*d int8 operands + 9*bq*d f32 (out + carry) +
+    5*bq*bk (f32 logits + int8 codes).  A single key block covering the
+    whole row (bk >= Sk) additionally makes the online grid coincide with
+    the full-row reference, so prefer it while it fits.
+    """
+    def _halve(x):                       # stay 128-aligned while shrinking
+        return max(_LANE, _round_up(x // 2, _LANE))
+
+    bq = min(_round_up(sq, _LANE), 256)
+    bk = min(_round_up(sk, _LANE), 4096)
+
+    def vmem(bq, bk):
+        return (bq + 2 * bk) * d + 9 * bq * d + 5 * bq * bk
+
+    while vmem(bq, bk) > budget and bk > 512:
+        bk = _halve(bk)
+    while vmem(bq, bk) > budget and bq > _LANE:
+        bq = _halve(bq)
+    while vmem(bq, bk) > budget and bk > _LANE:
+        bk = _halve(bk)
+    return bq, bk
+
+
+# ---------------------------------------------------------------------------
+# Linear: ND activation x integerized weight -> Pallas qmatmul
+# ---------------------------------------------------------------------------
+
+def qlinear_supported(x, p) -> bool:
+    """Shape policy: can this dense() call lower onto kernels.qmatmul?"""
+    w_q = p.get("w_q")
+    if w_q is None or w_q.ndim != 2:          # float or expert/scan-stacked
+        return False
+    if x.ndim < 1 or x.shape[-1] == 0 or x.size == 0:
+        return False
+    if w_q.dtype == jnp.uint8 and x.shape[-1] % 2:
+        return False                          # packed nibbles need even K
+    return True
+
+
+def maybe_qlinear(x, p: dict, cfg):
+    """Pallas-backed dense() body; ``None`` -> caller uses the XLA path.
+
+    Flattens leading dims to 2D, quantizes the activation per-tensor (same
+    grid as the XLA path), keeps nibble-packed weights packed in HBM, and
+    folds ``dx_bar * dw`` plus bias into the kernel epilogue.
+    """
+    if resolve_backend(cfg) != "pallas" or not qlinear_supported(x, p):
+        STATS["qlinear_xla"] += 1
+        return None
+    STATS["qlinear_pallas"] += 1
+    xq = quant.quantize_tensor(x, cfg.a_bits)
+    w_q = p["w_q"]
+    packed = w_q.dtype == jnp.uint8
+    kdim = x.shape[-1]
+    n = w_q.shape[0]
+    x2 = xq.q.reshape(-1, kdim)
+    scale = (p["w_scale"] * xq.scale).astype(jnp.float32)
+    bias = p.get("b")
+    bm, bn, bk = qmatmul_blocks(x2.shape[0], n, kdim)
+    out = qmatmul(x2, w_q, scale,
+                  None if bias is None else bias.astype(jnp.float32),
+                  bm=bm, bn=bn, bk=bk, packed=packed,
+                  interpret=interpret_default())
+    return out.reshape(*x.shape[:-1], n).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention: (B, H, S, D) GQA -> folded (B*Hkv, G*Sq, D) fused kernel
+# ---------------------------------------------------------------------------
+
+def attention_supported(q, k, spec, cfg, q_offset, k_offset,
+                        k_positions) -> bool:
+    """Shape policy for the fused attention kernel.
+
+    The kernel indexes keys 0..Sk-1 from position 0: ring caches
+    (``k_positions``) and decode offsets fall back to XLA, as do prob grids
+    wider than int8 codes allow.
+    """
+    if cfg.attn_bits > 7:
+        return False
+    if getattr(cfg, "softmax", "base2") != "base2":
+        return False              # kernels hardcode the shift-exp (Eq. 4)
+    if k_positions is not None:
+        return False
+    if not (isinstance(q_offset, int) and q_offset == 0
+            and isinstance(k_offset, int) and k_offset == 0):
+        return False
+    if spec.window is not None and k.shape[2] > 2 * spec.window:
+        # Narrow local window over long keys: the XLA path slices each
+        # query chunk to ~(q_chunk + window) keys; the fused kernel would
+        # stream (and DMA) all Sk per query block.  Needs a bounded-kblk
+        # window kernel (ROADMAP) before dispatching here.
+        return False
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    return sq > 0 and k.shape[2] > 0 and hq % hkv == 0 and d > 0
+
+
+def maybe_attention(q, k, v, spec, cfg, *, q_offset=0, k_offset=0,
+                    k_positions=None):
+    """Pallas-backed attention() body; ``None`` -> caller's XLA path.
+
+    Folds batch into the kernel's head grid axis and GQA groups along the
+    query rows (row r has position ``r % Sq`` via ``sq_mod``), quantizing
+    float inputs per-tensor exactly like the XLA int path.  int8 KV-cache
+    QTensors stream in without a dequantized copy.
+    """
+    if resolve_backend(cfg) != "pallas" or not attention_supported(
+            q, k, spec, cfg, q_offset, k_offset, k_positions):
+        STATS["attention_xla"] += 1
+        return None
+    STATS["attention_pallas"] += 1
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    out_dtype = q.dtype if not isinstance(q, quant.QTensor) else jnp.float32
+
+    def as_q(x):
+        return x if isinstance(x, quant.QTensor) \
+            else quant.quantize_tensor(x, cfg.a_bits)
+
+    qq, kq, vq = as_q(q), as_q(k), as_q(v)
+    scale = spec.softmax_scale or (1.0 / d ** 0.5)
+    sc = scale * LOG2E * qq.scale * kq.scale    # same assoc as the XLA path
+    qf = qq.q.reshape(b, hkv, g, sq, d).reshape(b * hkv, g * sq, d)
+    kf = kq.q.reshape(b * hkv, sk, d)
+    vf = vq.q.reshape(b * hkv, sk, d)
+    bq, bk = attention_blocks(g * sq, sk, d)
+    out = int_attention_fused(qf, kf, vf, sc, vq.scale,
+                              attn_bits=cfg.attn_bits, causal=spec.causal,
+                              window=spec.window, bq=bq, bk=bk, sq_mod=sq,
+                              interpret=interpret_default())
+    out = out.reshape(b, hkv, g, sq, d).reshape(b, hq, sq, d)
+    return out.astype(out_dtype)

@@ -1,22 +1,46 @@
-"""Pallas TPU kernel: integer attention with embedded base-2 softmax.
+"""Pallas TPU kernels: integer attention with embedded base-2 softmax.
 
 Paper mapping (Fig. 3-4): the systolic array computes a full integer QK^T
 row while the scan chain accumulates Sigma = sum_j exp(...); the quantizer
 (thresholds scaled by Sigma) then emits low-bit probabilities that feed the
-integer PV matmul.  On TPU we stream K/V tiles through VMEM in two passes:
+integer PV matmul.
 
-  pass 1 (stats): online integer-shift softmax statistics per query row —
-      m   = floor(running max of x),          x = sc * (Qq Kq^T)
-      s   = running sum of (1+r)*2^(x-m)      (rescale by 2^dm is EXACT
-      xm  = running max of x                   because m is an integer)
-  pass 2 (pv):    re-compute QK^T tiles (int8 MACs are 2x-cheap), quantize
-      probs against the Sigma-scaled grid, accumulate integer PV.
+Probability grid (v2, see kernels/ref.py): codes are quantized on the
+power-of-two Sigma-scaled grid — ``p_q = round(e * qmax / 2)`` with
+``e = (1+r) * 2^(x - m)`` and ``m = floor(running max)``.  Because the grid
+references ``2^m`` (an integer power of two) rather than the row's ``emax``,
+the codes for a key block depend only on the *running* statistics at the
+time the block streams by: when a later block raises ``m`` by ``dm``, every
+previously accumulated integer contribution rescales by exactly ``2^-dm``.
+The cross-block PV carry lives in an f32 scratch accumulator (f32 represents
+ints < 2^24 exactly and power-of-two rescales only touch the exponent), so
+the rescale chain is exact; each block's PV contraction itself runs on the
+MXU in int8 x int8 -> int32.
 
-Two int8 passes cost the same MXU FLOPs as one bf16 pass and keep the PV
-contraction fully integer, matching the paper's dataflow.  attn_bits <= 7 so
-prob codes fit int8 (documented deviation: the paper's 8-bit unsigned probs
-use the XLA path).  int32 PV accumulation is safe while
-attn_bits + 7 + log2(Sk) <= 31 (e.g. 7-bit probs up to 128k keys).
+Two kernels share that quantizer:
+
+- :func:`int_attention` — the original TWO-PASS design: a stats pass
+  computes Sigma (one QK^T sweep), then a PV pass recomputes QK^T per tile,
+  quantizes, and accumulates integer PV.  3*H*Sq*Sk*D MXU MACs, K read
+  twice per query block.
+- :func:`int_attention_fused` — SINGLE-PASS online kernel (this PR's
+  serving path): batch*head and query blocks span the grid, K/V tiles
+  stream through VMEM once while running (m, Sigma) and the PV carry
+  advance together.  2*H*Sq*Sk*D MACs — one QK^T per tile — and half the
+  K-tile HBM reads of the two-pass design.
+
+Both emit bit-identical outputs (same running-m code sequence, same f32
+accumulation order); :func:`~repro.kernels.ref.int_attention_ref_streamed`
+is the jnp oracle for any ``bk``, and the full-row oracle/XLA serving path
+coincide whenever one key block covers the row (``bk >= Sk`` — what the
+dispatch block heuristics pick for model-sized sequences).
+
+``attn_bits <= 7`` so prob codes fit int8 (documented deviation: the
+paper's 8-bit unsigned probs use the XLA path).  int32 per-block PV
+accumulation is safe while ``attn_bits + 7 + log2(bk) <= 31``.
+
+``interpret=True`` (default) validates on CPU; set ``REPRO_PALLAS_COMPILED=1``
+(see kernels/dispatch.py) to run the compiled MXU path on TPU.
 """
 from __future__ import annotations
 
@@ -35,10 +59,16 @@ def _exp2_shift(x):
     return jnp.ldexp(1.0 + (x - f), f.astype(jnp.int32))
 
 
-def _mask(i, kblk, bq, bk, sq, causal, window):
-    q_pos = (i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)) % sq
+def _mask(i, kblk, bq, bk, sq_mod, sk, causal, window):
+    """Validity of (q row, key) pairs in one (bq, bk) tile.
+
+    Query rows wrap modulo ``sq_mod`` (GQA groups stacked along Sq); keys at
+    or beyond ``sk`` are padding and always invalid.
+    """
+    q_pos = (i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)) \
+        % sq_mod
     k_pos = kblk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    m = jnp.ones((bq, bk), jnp.bool_)
+    m = k_pos < sk
     if causal:
         m &= k_pos <= q_pos
     if window is not None:
@@ -46,117 +76,214 @@ def _mask(i, kblk, bq, bk, sq, causal, window):
     return m
 
 
-def _stats_kernel(q_ref, k_ref, sc_ref, m_ref, s_ref, xm_ref,
-                  mb_ref, sb_ref, xb_ref, *, nk, bq, bk, sq, causal, window):
+def _tile_logits(q_ref, k_ref, sc_ref, valid):
+    """Masked, clamped base-2 logits of one tile (int8 MXU contraction)."""
+    acc = jnp.dot(q_ref[0], k_ref[0].T, preferred_element_type=jnp.int32)
+    x = acc.astype(jnp.float32) * sc_ref[0, 0]
+    return jnp.maximum(jnp.where(valid, x, NEG), -120.0)
+
+
+def _online_update(x, m_ref, qmax):
+    """Advance running m, emit this tile's codes + rescale factor + e-sum."""
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.floor(jnp.max(x, axis=-1)))
+    e = jnp.where(x <= -120.0, 0.0, _exp2_shift(x - m_new[:, None]))
+    p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax).astype(jnp.int8)
+    r = jnp.exp2(m_old - m_new)      # exact: both integers (or -inf -> 0)
+    m_ref[...] = m_new
+    return e, p_q, r
+
+
+def _stats_kernel(q_ref, k_ref, sc_ref, s_ref, mb_ref, sb_ref, *,
+                  nk, bq, bk, sq_mod, sk, causal, window, qmax):
     i, kblk = pl.program_id(1), pl.program_id(2)
 
     @pl.when(kblk == 0)
     def _init():
         mb_ref[...] = jnp.full_like(mb_ref, NEG)
         sb_ref[...] = jnp.zeros_like(sb_ref)
-        xb_ref[...] = jnp.full_like(xb_ref, NEG)
 
-    acc = jnp.dot(q_ref[0], k_ref[0].T, preferred_element_type=jnp.int32)
-    x = acc.astype(jnp.float32) * sc_ref[0, 0]
-    x = jnp.where(_mask(i, kblk, bq, bk, sq, causal, window), x, NEG)
-    x = jnp.maximum(x, -120.0)
+    valid = _mask(i, kblk, bq, bk, sq_mod, sk, causal, window)
 
-    m_old = mb_ref[...]
-    m_new = jnp.maximum(m_old, jnp.floor(jnp.max(x, axis=-1)))
-    e = _exp2_shift(x - m_new[:, None])
-    e = jnp.where(x <= -120.0, 0.0, e)
-    # 2^(m_old - m_new) rescale is exact: both are integers.
-    sb_ref[...] = sb_ref[...] * jnp.exp2(m_old - m_new) + jnp.sum(e, axis=-1)
-    mb_ref[...] = m_new
-    xb_ref[...] = jnp.maximum(xb_ref[...], jnp.max(x, axis=-1))
+    # Fully-masked tiles (causal upper triangle, out-of-window, key padding)
+    # contribute e = 0 to every carry: skipping them is bit-exact and saves
+    # the MXU contraction.
+    @pl.when(jnp.any(valid))
+    def _compute():
+        x = _tile_logits(q_ref, k_ref, sc_ref, valid)
+        e, _, r = _online_update(x, mb_ref, qmax)
+        sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
 
     @pl.when(kblk == nk - 1)
     def _out():
-        m_ref[0, :] = mb_ref[...]
         s_ref[0, :] = jnp.maximum(sb_ref[...], 1e-30)
-        xm_ref[0, :] = xb_ref[...]
 
 
-def _pv_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, m_ref, s_ref, xm_ref,
-               o_ref, acc_ref, *, nk, bq, bk, sq, causal, window, qmax):
+def _pv_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, s_ref, o_ref,
+               mb_ref, acc_ref, *, nk, bq, bk, sq_mod, sk, causal, window,
+               qmax):
     i, kblk = pl.program_id(1), pl.program_id(2)
 
     @pl.when(kblk == 0)
     def _init():
+        mb_ref[...] = jnp.full_like(mb_ref, NEG)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc = jnp.dot(q_ref[0], k_ref[0].T, preferred_element_type=jnp.int32)
-    x = acc.astype(jnp.float32) * sc_ref[0, 0]
-    valid = _mask(i, kblk, bq, bk, sq, causal, window)
-    x = jnp.maximum(jnp.where(valid, x, NEG), -120.0)
+    valid = _mask(i, kblk, bq, bk, sq_mod, sk, causal, window)
 
-    m = m_ref[0, :][:, None]
-    s = s_ref[0, :][:, None]
-    emax = _exp2_shift(xm_ref[0, :] - m_ref[0, :])[:, None]
-    dattn = jnp.maximum(emax / s, 1e-8) / qmax          # Sigma-scaled grid
-    e = jnp.where(x <= -120.0, 0.0, _exp2_shift(x - m))
-    p_q = jnp.clip(jnp.round(e / (s * dattn)), 0, qmax).astype(jnp.int8)
-    acc_ref[...] += jnp.dot(p_q, v_ref[0], preferred_element_type=jnp.int32)
+    @pl.when(jnp.any(valid))
+    def _compute():
+        x = _tile_logits(q_ref, k_ref, sc_ref, valid)
+        _, p_q, r = _online_update(x, mb_ref, qmax)
+        pv = jnp.dot(p_q, v_ref[0], preferred_element_type=jnp.int32)
+        acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
 
     @pl.when(kblk == nk - 1)
     def _out():
-        o_ref[0] = acc_ref[...].astype(jnp.float32) * (dattn * vs_ref[0, 0])
+        dattn = (2.0 / qmax) / s_ref[0, :][:, None]
+        o_ref[0] = acc_ref[...] * (dattn * vs_ref[0, 0])
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "attn_bits", "causal", "window", "bq", "bk", "interpret"))
-def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
-                  window=None, bq=128, bk=128, interpret=True):
-    """Integer attention over int8 operands.
+def _fused_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, o_ref,
+                  mb_ref, sb_ref, acc_ref, *, nk, bq, bk, sq_mod, sk, causal,
+                  window, qmax):
+    i, kblk = pl.program_id(1), pl.program_id(2)
 
-    q_q: (H, Sq, D) int8 (GQA pre-folded: G query groups stacked along Sq,
-    row r has position r % true_Sq); k_q, v_q: (H, Sk, D) int8.
-    ``sc`` = softmax_scale * dq * dk * log2(e) (scalar f32);
-    ``v_scale`` = dv.  Returns (H, Sq, D) f32.
-    """
-    assert attn_bits <= 7, "int8 prob codes need attn_bits <= 7"
+    @pl.when(kblk == 0)
+    def _init():
+        mb_ref[...] = jnp.full_like(mb_ref, NEG)
+        sb_ref[...] = jnp.zeros_like(sb_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = _mask(i, kblk, bq, bk, sq_mod, sk, causal, window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        x = _tile_logits(q_ref, k_ref, sc_ref, valid)
+        e, p_q, r = _online_update(x, mb_ref, qmax)
+        pv = jnp.dot(p_q, v_ref[0], preferred_element_type=jnp.int32)
+        sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
+        acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
+
+    @pl.when(kblk == nk - 1)
+    def _out():
+        s = jnp.maximum(sb_ref[...], 1e-30)[:, None]
+        dattn = (2.0 / qmax) / s
+        o_ref[0] = acc_ref[...] * (dattn * vs_ref[0, 0])
+
+
+def _prep(q_q, k_q, v_q, sc, v_scale, bq, bk):
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
-    qmax = float((1 << attn_bits) - 1)
-
     pq_, pk_ = (-sq) % bq, (-sk) % bk
     if pq_:
         q_q = jnp.pad(q_q, ((0, 0), (0, pq_), (0, 0)))
     if pk_:
         k_q = jnp.pad(k_q, ((0, 0), (0, pk_), (0, 0)))
         v_q = jnp.pad(v_q, ((0, 0), (0, pk_), (0, 0)))
-    sqp, skp = sq + pq_, sk + pk_
-    nq, nk = sqp // bq, skp // bk
     sc2 = jnp.asarray(sc, jnp.float32).reshape(1, 1)
     vs2 = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
+    return q_q, k_q, v_q, sc2, vs2, (sq + pq_) // bq, (sk + pk_) // bk
 
-    qspec = pl.BlockSpec((1, bq, d), lambda h, i, k: (h, i, 0))
-    kspec = pl.BlockSpec((1, bk, d), lambda h, i, k: (h, k, 0))
-    sspec = pl.BlockSpec((1, 1), lambda h, i, k: (0, 0))
-    rowspec = pl.BlockSpec((1, bq), lambda h, i, k: (h, i))
 
-    stats = pl.pallas_call(
-        functools.partial(_stats_kernel, nk=nk, bq=bq, bk=bk, sq=sq,
-                          causal=causal, window=window),
-        grid=(h, nq, nk),
-        in_specs=[qspec, kspec, sspec],
-        out_specs=[rowspec, rowspec, rowspec],
-        out_shape=[jax.ShapeDtypeStruct((h, sqp), jnp.float32)] * 3,
-        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32)] * 3,
-        interpret=interpret,
+def _specs(bq, bk, d):
+    return dict(
+        qspec=pl.BlockSpec((1, bq, d), lambda h, i, k: (h, i, 0)),
+        kspec=pl.BlockSpec((1, bk, d), lambda h, i, k: (h, k, 0)),
+        sspec=pl.BlockSpec((1, 1), lambda h, i, k: (0, 0)),
+        rowspec=pl.BlockSpec((1, bq), lambda h, i, k: (h, i)),
     )
-    m, s, xm = stats(q_q, k_q, sc2)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "attn_bits", "causal", "window", "bq", "bk", "sq_mod", "interpret"))
+def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
+                  window=None, bq=128, bk=128, sq_mod=None, interpret=True):
+    """TWO-PASS integer attention over int8 operands (baseline design).
+
+    q_q: (H, Sq, D) int8 (GQA pre-folded: G query groups stacked along Sq,
+    row r has position ``r % sq_mod``; ``sq_mod`` defaults to Sq); k_q, v_q:
+    (H, Sk, D) int8.  ``sc`` = softmax_scale * dq * dk * log2(e) (scalar
+    f32); ``v_scale`` = dv.  Returns (H, Sq, D) f32.
+
+    Pass 1 sweeps K once for Sigma; pass 2 re-sweeps K, recomputing QK^T
+    and the running-m code sequence (identical to the fused kernel's), and
+    accumulates integer PV.  Kept as the measured baseline the single-pass
+    kernel improves on: 3 MXU sweeps and 2x K-tile HBM reads.
+    """
+    assert attn_bits <= 7, "int8 prob codes need attn_bits <= 7"
+    h, sq, d = q_q.shape
+    sk = k_q.shape[1]
+    qmax = float((1 << attn_bits) - 1)
+    q_q, k_q, v_q, sc2, vs2, nq, nk = _prep(q_q, k_q, v_q, sc, v_scale,
+                                            bq, bk)
+    sp = _specs(bq, bk, d)
+    kw = dict(nk=nk, bq=bq, bk=bk, sq_mod=sq_mod or sq, sk=sk,
+              causal=causal, window=window, qmax=qmax)
+
+    s = pl.pallas_call(
+        functools.partial(_stats_kernel, **kw),
+        grid=(h, nq, nk),
+        in_specs=[sp["qspec"], sp["kspec"], sp["sspec"]],
+        out_specs=sp["rowspec"],
+        out_shape=jax.ShapeDtypeStruct((h, nq * bq), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(q_q, k_q, sc2)
 
     out = pl.pallas_call(
-        functools.partial(_pv_kernel, nk=nk, bq=bq, bk=bk, sq=sq,
-                          causal=causal, window=window, qmax=qmax),
+        functools.partial(_pv_kernel, **kw),
         grid=(h, nq, nk),
-        in_specs=[qspec, kspec,
-                  pl.BlockSpec((1, bk, d), lambda h, i, k: (h, k, 0)),
-                  sspec, sspec, rowspec, rowspec, rowspec],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, k: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((h, sqp, d), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bq, d), jnp.int32)],
+        in_specs=[sp["qspec"], sp["kspec"], sp["kspec"], sp["sspec"],
+                  sp["sspec"], sp["rowspec"]],
+        out_specs=sp["qspec"],
+        out_shape=jax.ShapeDtypeStruct((h, nq * bq, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
         interpret=interpret,
-    )(q_q, k_q, v_q, sc2, vs2, m, s, xm)
+    )(q_q, k_q, v_q, sc2, vs2, s)
     return out[:, :sq]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "attn_bits", "causal", "window", "bq", "bk", "sq_mod", "interpret"))
+def int_attention_fused(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
+                        causal=True, window=None, bq=128, bk=128,
+                        sq_mod=None, interpret=True):
+    """SINGLE-PASS fused integer attention (the serving kernel).
+
+    Same contract as :func:`int_attention`.  One sweep over K/V per query
+    block: each tile's QK^T feeds the running (m, Sigma) update AND the
+    quantized PV accumulation, so every K/V tile is read from HBM and
+    pushed through the MXU exactly once — 2*H*Sq*Sk*D MACs vs the
+    two-pass design's 3*H*Sq*Sk*D.
+    """
+    assert attn_bits <= 7, "int8 prob codes need attn_bits <= 7"
+    h, sq, d = q_q.shape
+    sk = k_q.shape[1]
+    qmax = float((1 << attn_bits) - 1)
+    q_q, k_q, v_q, sc2, vs2, nq, nk = _prep(q_q, k_q, v_q, sc, v_scale,
+                                            bq, bk)
+    sp = _specs(bq, bk, d)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, nk=nk, bq=bq, bk=bk,
+                          sq_mod=sq_mod or sq, sk=sk, causal=causal,
+                          window=window, qmax=qmax),
+        grid=(h, nq, nk),
+        in_specs=[sp["qspec"], sp["kspec"], sp["kspec"], sp["sspec"],
+                  sp["sspec"]],
+        out_specs=sp["qspec"],
+        out_shape=jax.ShapeDtypeStruct((h, nq * bq, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q_q, k_q, v_q, sc2, vs2)
+    return out[:, :sq]
+
+
+def attention_macs(h, sq, sk, d, *, design="single"):
+    """Analytic MXU MAC count per kernel call (both int8 contractions)."""
+    qk = h * sq * sk * d
+    return {"single": 2 * qk, "two_pass": 3 * qk}[design]

@@ -12,7 +12,10 @@ VMEM, halving weight bandwidth (the TPU analogue of the paper's low-bit
 storage benefit).
 
 Block sizes default to (128, 128, 512): MXU-aligned (multiples of 128 in
-lane dims) and VMEM-light (x: 64KB, w: 64KB int8, acc: 64KB int32).
+lane dims) and VMEM-light (x: 64KB, w: 64KB int8, acc: 64KB int32).  The
+serving graph overrides them per shape via
+:func:`repro.kernels.dispatch.qmatmul_blocks` (VMEM-budgeted heuristics);
+model graphs reach this kernel through ``dispatch.maybe_qlinear``.
 """
 from __future__ import annotations
 

@@ -1,4 +1,37 @@
-"""Pure-jnp oracles for every kernel (exact intended semantics, no tiling)."""
+"""Pure-jnp oracles for every kernel (exact intended semantics, no tiling).
+
+Probability quantizer (v2, this PR): codes are quantized on the
+**power-of-two Sigma-scaled grid**
+
+    e    = (1+r) * 2^(x - m),  m = floor(row max)  =>  e in [0, 2)
+    p_q  = clip(round(e * qmax / 2), 0, qmax)            (code grid: 2/qmax)
+    out  = (sum_j p_q[j] v[j]) * dattn * dv,   dattn = (2/qmax) / Sigma
+
+Unlike the v1 grid (step ``emax/(Sigma*qmax)``), the code grid does not
+depend on the row maximum of ``e`` — only on the *integer* ``m``.  Two
+consequences:
+
+- hardware: the comparator thresholds are fixed power-of-two multiples of
+  Sigma (pure shifts), no per-row ``emax`` divider in front of the
+  quantizer;
+- kernels: an online pass can emit final codes as keys stream by, because
+  a change of the running ``m`` rescales previously accumulated integer
+  contributions by an exact power of two.  This is what enables the fused
+  single-pass ``int_attention_fused`` kernel.
+
+The cost is up to one bit of code range (max code lands in [qmax/2, qmax]
+instead of pinning qmax exactly).
+
+Two oracles are provided for attention:
+
+- :func:`int_attention_ref` — full-row semantics: ``m`` is the final row
+  max.  This is what the XLA serving path computes, and what the kernels
+  compute whenever one key block covers the row (``bk >= Sk``).
+- :func:`int_attention_ref_streamed` — block-streamed semantics: keys are
+  consumed in ``bk``-sized blocks and every block's codes are quantized
+  against the *running* ``m``.  Bit-matches the Pallas kernels for any
+  ``bk``.
+"""
 from __future__ import annotations
 
 import jax
@@ -16,12 +49,24 @@ def qmatmul_ref(x_q, w_q, scale, bias=None):
     return out
 
 
+def _attn_mask(sq, sk, sq_mod, causal, window):
+    q_pos = (jnp.arange(sq) % sq_mod)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
 def int_attention_ref(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
-                      causal=True, window=None):
+                      causal=True, window=None, sq_mod=None):
     """Full-row integer attention with base-2 softmax (paper semantics).
 
-    Same shapes/contract as kernels.int_attention (q rows wrap modulo Sq for
-    GQA folding).
+    Same shapes/contract as kernels.int_attention; ``sq_mod`` is the true
+    query length when G GQA groups are stacked along Sq (q row r has
+    position ``r % sq_mod``; defaults to Sq).
     """
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
@@ -29,23 +74,63 @@ def int_attention_ref(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
     acc = jnp.einsum("hqd,hkd->hqk", q_q.astype(jnp.int32),
                      k_q.astype(jnp.int32))
     x = acc.astype(jnp.float32) * sc
-    q_pos = (jnp.arange(sq) % sq)[:, None]
-    k_pos = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), bool)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window is not None:
-        mask &= k_pos > q_pos - window
+    mask = _attn_mask(sq, sk, sq_mod or sq, causal, window)
     x = jnp.maximum(jnp.where(mask, x, -1e30), -120.0)
     m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))
     e = jnp.where(x <= -120.0, 0.0, exp2_shift(x - m))
     s = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
-    emax = jnp.max(e, axis=-1, keepdims=True)
-    dattn = jnp.maximum(emax / s, 1e-8) / qmax
-    p_q = jnp.clip(jnp.round(e / (s * dattn)), 0, qmax)
+    dattn = (2.0 / qmax) / s                      # power-of-two Sigma grid
+    p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
     pv = jnp.einsum("hqk,hkd->hqd", p_q.astype(jnp.int32),
                     v_q.astype(jnp.int32))
     return pv.astype(jnp.float32) * (dattn * v_scale)
+
+
+def int_attention_ref_streamed(q_q, k_q, v_q, sc, v_scale, *, bk,
+                               attn_bits=7, causal=True, window=None,
+                               sq_mod=None):
+    """Block-streamed oracle: quantize each key block at the running grid.
+
+    Mirrors the Pallas kernels' online accumulation exactly: per key block
+    the running ``m`` is updated first, the block's codes are emitted on the
+    grid referenced to the *current* ``2^m``, and the integer PV partials
+    are carried in f32 with an exact ``2^(m_old - m_new)`` rescale.
+    """
+    h, sq, d = q_q.shape
+    sk = k_q.shape[1]
+    qmax = (1 << attn_bits) - 1
+    pad = (-sk) % bk
+    if pad:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pad), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad), (0, 0)))
+    mask = _attn_mask(sq, sk, sq_mod or sq, causal, window)
+    if pad:
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))  # padded keys invalid
+    nk = (sk + pad) // bk
+
+    acc_all = jnp.einsum("hqd,hkd->hqk", q_q.astype(jnp.int32),
+                         k_q.astype(jnp.int32))
+    x_all = acc_all.astype(jnp.float32) * sc
+    x_all = jnp.maximum(jnp.where(mask[None], x_all, -1e30), -120.0)
+
+    def block(carry, t):
+        m_old, s_run, pv = carry
+        x = jax.lax.dynamic_slice_in_dim(x_all, t * bk, bk, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(v_q, t * bk, bk, axis=1)
+        m_new = jnp.maximum(m_old, jnp.floor(jnp.max(x, -1, keepdims=True)))
+        e = jnp.where(x <= -120.0, 0.0, exp2_shift(x - m_new))
+        p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
+        r = jnp.exp2(m_old - m_new)               # exact: both integers
+        blk = jnp.einsum("hqk,hkd->hqd", p_q.astype(jnp.int32),
+                         v.astype(jnp.int32))
+        return (m_new, s_run * r + jnp.sum(e, -1, keepdims=True),
+                pv * r + blk.astype(jnp.float32)), None
+
+    init = (jnp.full((h, sq, 1), -1e30), jnp.zeros((h, sq, 1)),
+            jnp.zeros((h, sq, d)))
+    (m, s, pv), _ = jax.lax.scan(block, init, jnp.arange(nk))
+    dattn = (2.0 / qmax) / jnp.maximum(s, 1e-30)
+    return pv * (dattn * v_scale)
 
 
 def pq_layernorm_ref(x, gamma, beta, delta, *, bits=8, eps=1e-6,

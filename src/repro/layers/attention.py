@@ -15,6 +15,12 @@ Modes:
   float — exact softmax, fp matmuls (baseline / Q-ViT-style path)
   fake  — QAT: fake-quantized q/k/v and probs, fp matmuls (training graph)
   int   — integer matmuls + base-2 softmax + quantized probs (serving graph)
+
+The int path runs as XLA einsums by default; with the "pallas" kernel
+backend active (see :mod:`repro.kernels.dispatch`) supported shapes route
+to the fused single-pass Pallas kernel instead, which quantizes q/k/v once
+per tensor (the XLA path re-calibrates per query chunk when Sq > q_chunk —
+identical whenever one chunk covers the queries).
 """
 from __future__ import annotations
 
@@ -94,15 +100,17 @@ def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
         m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))   # integer shift
         e = exp2_shift(x - m) if cfg.softmax == "base2" \
             else jnp.exp2(x - m)
-        e = jnp.where(mask, e, 0.0)
-        sigma = jnp.sum(e, axis=-1, keepdims=True)
-        # Sigma-scaled quantizer (paper §IV-B), per-row dynamic grid.
+        e = jnp.where(mask & (x > -120.0), e, 0.0)
+        sigma = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        # Sigma-scaled quantizer (paper §IV-B) on the power-of-two grid:
+        # code step 2/qmax relative to 2^m (m integer), so thresholds are
+        # pure shifts of Sigma and the same codes can be emitted online by
+        # the streaming Pallas kernel (see kernels/ref.py).
         qmax = (1 << cfg.attn_bits) - 1
-        emax = jnp.max(e, axis=-1, keepdims=True)
-        dattn = jnp.maximum(emax / sigma, 1e-8) / qmax      # prob-domain step
+        dattn = (2.0 / qmax) / sigma                        # prob-domain step
         # Unsigned codes; int32 container in the XLA path (the Pallas kernel
         # keeps probs in int8 for the MXU, which needs attn_bits <= 7).
-        p_q = jnp.clip(jnp.round(e / (sigma * dattn)), 0, qmax).astype(
+        p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax).astype(
             ACC_DTYPE)
         pv = jnp.einsum("bhgqk,bhkd->bhgqd", p_q, vq.q,
                         preferred_element_type=ACC_DTYPE)
@@ -118,18 +126,23 @@ def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
 
     x = jnp.einsum("bhgqd,bhkd->bhgqk", q, k).astype(jnp.float32) * scale
     x = jnp.where(mask, x, NEG_BIG)
-    if mode == "fake" and cfg.softmax == "base2":
-        # QAT trains through the paper's shift-exp approximation (Eq. 4).
+    if mode == "fake":
+        # QAT trains through the same pipeline the int path serves: shift
+        # exp (or exact 2^x for the ablation), floor-max shift, and the
+        # power-of-two Sigma-scaled prob grid — so the fake-quantized probs
+        # land on exactly the codes mode="int" will emit.
         xl = jnp.maximum(x * LOG2E, -120.0)
         m = jnp.floor(jnp.max(xl, axis=-1, keepdims=True))
-        e = jnp.where(mask, exp2_shift(xl - m), 0.0)
-        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        e = exp2_shift(xl - m) if cfg.softmax == "base2" \
+            else jnp.exp2(xl - m)
+        e = jnp.where(mask & (xl > -120.0), e, 0.0)
+        sigma = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        p = e / sigma
+        qmaxp = (1 << cfg.attn_bits) - 1
+        dp = (2.0 / qmaxp) / sigma                  # serving-grid step
+        p = quant.fake_quant(p, dp, cfg.attn_bits, True)
     else:
         p = jax.nn.softmax(x, axis=-1)
-    if mode == "fake":
-        qmaxp = (1 << cfg.attn_bits) - 1
-        dp = jnp.maximum(jnp.max(p, -1, keepdims=True), 1e-8) / qmaxp
-        p = quant.fake_quant(p, dp, cfg.attn_bits, True)
     p = p.astype(q.dtype)
     return jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
 
@@ -144,6 +157,12 @@ def attention(q, k, v, spec: AttnSpec, cfg: Optional[QuantConfig] = None, *,
     ``k_positions`` (Sk,) overrides key positions for ring caches (negative
     entries mark unwritten slots and are masked).  Returns (B, Hq, Sq, D).
     """
+    if cfg is not None and cfg.mode == "int":
+        from repro.kernels.dispatch import maybe_attention
+        out = maybe_attention(q, k, v, spec, cfg, q_offset=q_offset,
+                              k_offset=k_offset, k_positions=k_positions)
+        if out is not None:                    # Pallas fused kernel path
+            return out
     b, hq, sq, d = q.shape
     hkv = k.shape[1]
     g = hq // hkv

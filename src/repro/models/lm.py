@@ -265,7 +265,10 @@ def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode):
         out = attention(q, k_all, v_all, spec, qcfg, q_offset=pos,
                         k_positions=k_positions)
     else:
-        out = attention(q, k, v, spec, qcfg, q_offset=positions[0, 0])
+        # Non-decode positions are always arange(s): a STATIC zero offset
+        # (traced offsets would veto the Pallas fused-attention dispatch).
+        out = attention(q, k, v, spec, qcfg,
+                        q_offset=positions[0, 0] if decode else 0)
         if cache is not None:                     # prefill: write cache
             span = cache["k"].shape[2]
             s_in = k.shape[2]

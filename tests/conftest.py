@@ -1,9 +1,27 @@
 import os
 import sys
 
+import pytest
+
 # Tests must see exactly 1 CPU device (the dry-run pins 512 in its own
 # process); make sure nothing leaks in.
 os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow (long interpret-mode "
+                          "sweeps / multi-minute end-to-end suites)")
+
+
+# (the "slow" marker itself is registered once, in pytest.ini)
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow suite: pass --runslow to include")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

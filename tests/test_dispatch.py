@@ -1,0 +1,253 @@
+"""Kernel-backend dispatch: pallas and xla serving paths must agree.
+
+Parity tolerances are tight (1e-5) because the integer contractions are
+exact and the two paths share quantization grids; only f32 epilogue
+association order differs.  This holds at dispatched shapes where one key
+block covers the row (Sk <= 4096 at default budget — all of these tests
+and every model in the zoo at smoke sizes); longer rows stream on the
+running-m grid and are covered against the streamed oracle in
+test_kernels.py instead.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import QuantConfig, dense, integerize_params
+from repro.kernels import dispatch
+from repro.layers.attention import AttnSpec, attention
+
+
+def _rel_close(a, b, tol=1e-5):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    scale = np.abs(b).max() + 1e-9
+    np.testing.assert_allclose(a / scale, b / scale, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# backend selection
+# ---------------------------------------------------------------------------
+
+def test_backend_selection_layers():
+    assert dispatch.get_backend() in ("xla", "pallas")
+    with dispatch.use_backend("pallas"):
+        assert dispatch.get_backend() == "pallas"
+        with dispatch.use_backend("xla"):
+            assert dispatch.get_backend() == "xla"
+        assert dispatch.get_backend() == "pallas"
+    # QuantConfig.backend overrides the process default.
+    qc = QuantConfig(mode="int", backend="pallas")
+    assert dispatch.resolve_backend(qc) == "pallas"
+    assert dispatch.resolve_backend(QuantConfig(mode="int")) \
+        == dispatch.get_backend()
+    with pytest.raises(ValueError):
+        dispatch.set_backend("cuda")
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend(QuantConfig(mode="int", backend="Pallas"))
+
+
+def test_block_heuristics_budgeted():
+    for shape in [(7, 33, 48), (512, 4096, 4096), (1, 10, 100000),
+                  (300, 300, 300), (257, 513, 7000)]:
+        for budget in (dispatch.VMEM_BUDGET, 2 ** 19):
+            bm, bn, bk = dispatch.qmatmul_blocks(*shape, budget=budget)
+            assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+            assert (bm == bn == bk == 128
+                    or bm * bk + bn * bk + 8 * bm * bn <= budget)
+    for sq, sk, d in [(198, 198, 64), (4096, 4096, 128), (1, 100000, 64),
+                      (300, 3000, 96)]:
+        for budget in (dispatch.VMEM_BUDGET, 2 ** 19):
+            bq, bk = dispatch.attention_blocks(sq, sk, d, budget=budget)
+            assert bq % 128 == 0 and bk % 128 == 0
+    # Model-sized rows fit one key block: online grid == full-row grid.
+    assert dispatch.attention_blocks(198, 198, 64)[1] >= 198
+
+
+# ---------------------------------------------------------------------------
+# dense: pallas qmatmul vs XLA int path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lead,m,n,k", [
+    ((), 7, 33, 48),            # ragged everything
+    ((2,), 200, 130, 300),      # 3D activation
+    ((2, 3), 17, 96, 128),      # 4D activation
+])
+@pytest.mark.parametrize("bias", [True, False])
+def test_dense_backend_parity(lead, m, n, k, bias):
+    key = jax.random.PRNGKey(m + n + k)
+    x = jax.random.normal(key, (*lead, m, k))
+    p = {"w": jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.05}
+    if bias:
+        p["b"] = jax.random.normal(jax.random.fold_in(key, 2), (n,)) * 0.1
+    cfg = QuantConfig(w_bits=6, a_bits=8, mode="int")
+    ip = integerize_params({"l": p}, cfg)["l"]
+    y_xla = dense(x, ip, cfg)
+    with dispatch.use_backend("pallas"):
+        y_pal = dense(x, ip, cfg)
+    assert y_pal.shape == (*lead, m, n)
+    _rel_close(y_pal, y_xla)
+
+
+def test_dense_packed_int4_parity():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (64, 128))
+    p = {"w": jax.random.normal(jax.random.fold_in(key, 1), (128, 96)) * .05}
+    cfg = QuantConfig(w_bits=4, a_bits=8, mode="int", pack_weights=True)
+    ip = integerize_params({"l": p}, cfg)["l"]
+    assert ip["w_q"].dtype == jnp.uint8        # stays nibble-packed in HBM
+    y_xla = dense(x, ip, cfg)
+    with dispatch.use_backend("pallas"):
+        y_pal = dense(x, ip, cfg)
+    _rel_close(y_pal, y_xla)
+
+
+def test_dense_fallback_for_stacked_weights():
+    """Scan-stacked (U, out, in) weights stay on the XLA path."""
+    cfg = QuantConfig(w_bits=8, a_bits=8, mode="int")
+    p = {"w_q": jnp.zeros((2, 8, 8), jnp.int8), "w_scale": jnp.ones((2, 8))}
+    assert not dispatch.qlinear_supported(jnp.zeros((4, 8)), p)
+    assert dispatch.maybe_qlinear(jnp.zeros((4, 8)), p, cfg) is None
+
+
+# ---------------------------------------------------------------------------
+# attention: pallas fused kernel vs XLA int path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d,causal,window", [
+    (2, 4, 4, 32, 32, 16, False, None),     # MHA, cross
+    (2, 4, 2, 32, 32, 16, True, None),      # GQA g=2
+    (1, 8, 1, 100, 100, 32, True, None),    # MQA, ragged seq
+    (1, 6, 3, 48, 48, 16, True, 32),        # GQA g=2 + local window
+    (1, 2, 2, 33, 77, 16, False, None),     # ragged cross-attention
+])
+def test_attention_backend_parity(b, hq, hkv, sq, sk, d, causal, window):
+    key = jax.random.PRNGKey(b + hq + sq)
+    q = jax.random.normal(key, (b, hq, sq, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, sk, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, sk, d))
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    spec = AttnSpec(causal=causal, window=window, q_chunk=256)
+    a_xla = attention(q, k, v, spec, cfg)
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas"):
+        a_pal = attention(q, k, v, spec, cfg)
+    assert dispatch.STATS["attention_pallas"] == 1
+    assert a_pal.shape == a_xla.shape
+    _rel_close(a_pal, a_xla)
+
+
+def test_attention_fallback_policies():
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    q = jnp.zeros((1, 2, 4, 8))
+    k = jnp.zeros((1, 2, 8, 8))
+    spec = AttnSpec()
+    ok = dispatch.attention_supported
+    assert ok(q, k, spec, cfg, 0, 0, None)
+    assert not ok(q, k, spec, cfg, 4, 0, None)            # decode offset
+    assert not ok(q, k, spec, cfg, 0, 2, None)            # key offset
+    assert not ok(q, k, spec, cfg, 0, 0, jnp.arange(8))   # ring positions
+    qc8 = cfg.replace(attn_bits=8)
+    assert not ok(q, k, spec, qc8, 0, 0, None)            # probs need int8
+    qce = cfg.replace(softmax="exact")
+    assert not ok(q, k, spec, qce, 0, 0, None)            # exact-exp ablation
+    # Narrow window over long keys: XLA's key slicing wins; veto pallas.
+    wspec = AttnSpec(window=2)
+    assert not ok(q, k, wspec, cfg, 0, 0, None)
+    assert ok(q, k, AttnSpec(window=8), cfg, 0, 0, None)  # sk <= 2*window
+    # Unsupported calls still produce correct results via the XLA path.
+    key = jax.random.PRNGKey(0)
+    qf = jax.random.normal(key, (1, 2, 1, 8))
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 8, 8))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 8, 8))
+    base = attention(qf, kf, vf, spec, cfg, q_offset=7)
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas"):
+        out = attention(qf, kf, vf, spec, cfg, q_offset=7)
+    assert dispatch.STATS["attention_pallas"] == 0
+    assert dispatch.STATS["attention_xla"] == 1
+    _rel_close(out, base)
+
+
+# ---------------------------------------------------------------------------
+# model level: a mode="int" ViT forward really runs on the Pallas kernels
+# ---------------------------------------------------------------------------
+
+def test_vit_int_forward_dispatches_to_pallas():
+    from repro.models import vit
+    qc = QuantConfig(w_bits=4, a_bits=8, attn_bits=7, mode="int",
+                     pack_weights=True)
+    cfg = vit.ViTConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                        img_size=32, patch=8, n_classes=10, quant=qc)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    ip = integerize_params(params, qc)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    logits_xla = vit.forward(ip, imgs, cfg)
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas"):
+        logits_pal = vit.forward(ip, imgs, cfg)
+    # Every integerized linear and the attention interior hit the kernels.
+    assert dispatch.STATS["qlinear_pallas"] > 0
+    assert dispatch.STATS["attention_pallas"] > 0
+    assert dispatch.STATS["qlinear_xla"] == 0
+    assert dispatch.STATS["attention_xla"] == 0
+    _rel_close(logits_pal, logits_xla)
+
+
+def test_vit_int_forward_config_backend():
+    """QuantConfig(backend=...) selects pallas without the global toggle."""
+    from repro.models import vit
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int",
+                     backend="pallas")
+    cfg = vit.ViTConfig(n_layers=1, d_model=32, n_heads=2, d_ff=64,
+                        img_size=16, patch=8, n_classes=4, quant=qc)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    ip = integerize_params(params, qc)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 3))
+    dispatch.reset_stats()
+    logits = vit.forward(ip, imgs, cfg)
+    assert dispatch.STATS["qlinear_pallas"] > 0
+    assert dispatch.STATS["attention_pallas"] > 0
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lm_prefill_dispatches_decode_falls_back():
+    """LM prefill (static zero offset) runs the fused kernel; the ring-cache
+    decode step stays on XLA by shape policy."""
+    from repro.models import lm
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab)}
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas"):
+        logits, cache = lm.prefill(params, batch, cfg, max_len=20)
+        assert dispatch.STATS["attention_pallas"] > 0
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        n_prefill = dispatch.STATS["attention_pallas"]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits2, _ = lm.decode_step(params, tok, cache, cfg)
+        assert dispatch.STATS["attention_pallas"] == n_prefill  # no new hits
+        assert dispatch.STATS["attention_xla"] > 0
+        assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness
+# ---------------------------------------------------------------------------
+
+def test_kernel_bench_json(tmp_path):
+    from benchmarks import kernel_bench
+    out = tmp_path / "BENCH_kernels.json"
+    rows, design = kernel_bench.main(["--quick", "--json", str(out)])
+    import json
+    payload = json.loads(out.read_text())
+    assert payload["kernels"] and all("wall_us" in r
+                                      for r in payload["kernels"])
+    ad = payload["attention_design"]
+    assert ad["s"] == 1024
+    assert ad["single_pass_macs"] < ad["two_pass_macs"]
+    assert ad["single_pass_kv_hbm_bytes"] < ad["two_pass_kv_hbm_bytes"]

@@ -1,10 +1,16 @@
 """Distributed tests on an 8-device host mesh (subprocess-isolated so the
-XLA device-count flag never leaks into other tests)."""
+XLA device-count flag never leaks into other tests).
+
+Each test compiles a multi-device program in a fresh subprocess (minutes of
+wall-clock total), so the whole module is marked slow: run with --runslow.
+"""
 import os
 import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

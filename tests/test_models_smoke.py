@@ -10,6 +10,13 @@ from repro.models import encdec, lm, vit
 
 LM_ARCHS = [a for a in ARCHS if a not in ("whisper-large-v3", "deit-s")]
 
+# Tier-1 keeps one attention LM and one recurrent arch; the full per-arch
+# sweep (minutes of XLA compiles) runs with --runslow.
+_FAST_ARCHS = {"qwen2.5-32b", "mamba2-130m"}
+LM_ARCH_PARAMS = [a if a in _FAST_ARCHS
+                  else pytest.param(a, marks=pytest.mark.slow)
+                  for a in LM_ARCHS]
+
 
 def _lm_batch(cfg, key, seq=24):
     toks = jax.random.randint(key, (2, seq), 0, cfg.vocab)
@@ -20,7 +27,7 @@ def _lm_batch(cfg, key, seq=24):
     return batch
 
 
-@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("arch", LM_ARCH_PARAMS)
 def test_lm_arch_train_step(arch):
     cfg = smoke_config(arch).replace(
         quant=QuantConfig(w_bits=4, a_bits=8, attn_bits=7, mode="fake"))
@@ -34,7 +41,7 @@ def test_lm_arch_train_step(arch):
     assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves), arch
 
 
-@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("arch", LM_ARCH_PARAMS)
 def test_lm_arch_integerized_serve(arch):
     cfg_f = smoke_config(arch)
     qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
