@@ -6,10 +6,13 @@ kernel call (bytes & MACs are exact functions of shape — this is the number
 that matters for the TPU target).
 
 ``--json [PATH]`` additionally writes ``BENCH_kernels.json`` (default name)
-with per-kernel timings and the attention kernel-design comparison
-(two-pass vs single-pass analytic MXU MACs / HBM bytes), so the perf
-trajectory is tracked from this PR onward.  ``--quick`` restricts to the
-smallest shapes (CI-sized run).
+with per-kernel timings, the attention kernel-design comparison (two-pass
+vs single-pass analytic MXU MACs / HBM bytes), and the DECODE section: a
+real prefill+decode loop timed under both kernel backends (tok/s plus the
+dispatch STATS proving the Pallas decode kernel actually served it) and
+the analytic per-step bytes-read / MAC comparison of the in-place
+ring-cache decode kernel vs the XLA fallback.  ``--quick`` restricts to
+the smallest shapes (CI-sized run).
 """
 from __future__ import annotations
 
@@ -69,6 +72,84 @@ def attention_design_analytic(h, s, d, *, bq=256):
     }
 
 
+def decode_step_analytic(h, g, span, live, d, kv_bits, *, bk=None):
+    """Per-decode-step K/V HBM bytes and MXU MACs: XLA fallback vs the
+    in-place ring-cache decode kernel.
+
+    The XLA path reads the whole ``span``-slot ring every step (and for a
+    nibble-packed cache first writes+reads an unpacked int8 copy); the
+    Pallas kernel DMAs only ring blocks holding a live key, in the stored
+    width, unpacking nibbles on the VPU.  ``pallas_bytes_per_step`` models
+    the unwrapped filling-up phase (live slots are the ring prefix, so
+    ``ceil(live/bk)`` blocks); ``pallas_bytes_per_step_wrapped`` is the
+    worst case after wrap-around, where the live span can straddle one
+    extra block boundary.  The two-pass design would additionally re-read
+    K per step (3 sweeps).
+    """
+    from repro.kernels.dispatch import decode_blocks
+    bk = bk or decode_blocks(span, d)
+    unit = kv_bits / 8
+    n_live = -(-live // bk)
+    touched = min(n_live * bk, span)
+    touched_wrapped = min((n_live + 1) * bk, span)
+    xla_bytes = 2 * h * span * d * unit
+    if kv_bits == 4:
+        xla_bytes += 2 * 2 * h * span * d      # unpacked int8 copy: w + r
+    return {
+        "h": h, "g": g, "span": span, "live": live, "d": d,
+        "kv_bits": kv_bits, "bk": bk,
+        "xla_bytes_per_step": int(xla_bytes),
+        "pallas_bytes_per_step": int(2 * h * touched * d * unit),
+        "pallas_bytes_per_step_wrapped":
+            int(2 * h * touched_wrapped * d * unit),
+        "xla_macs_per_step": attention_macs(h, g, span, d, design="single"),
+        "decode_macs_per_step": attention_macs(h, g, touched, d,
+                                               design="decode"),
+        "two_pass_macs_per_step": attention_macs(h, g, span, d,
+                                                 design="two_pass"),
+    }
+
+
+def decode_loop(quick=False):
+    """Timed prefill + decode loop on a smoke LM under both backends.
+
+    CPU wall-clocks (interpret-mode Pallas is slow by design — the number
+    that matters is the dispatch STATS and the analytic bytes above); kept
+    tiny so it runs in CI.
+    """
+    from repro.core.api import QuantConfig, integerize_params
+    from repro.kernels import dispatch
+    from repro.models import lm
+
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    cfg = lm.LMConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
+                      kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    gen = 2 if quick else 8
+    res = {}
+    for backend in ("xla", "pallas"):
+        with dispatch.use_backend(backend):
+            dispatch.reset_stats()
+            step = jax.jit(lambda p, t, c: lm.decode_step(p, t, c, cfg))
+            logits, cache = lm.prefill(params, {"tokens": toks}, cfg,
+                                       max_len=32)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            logits, cache = step(params, tok, cache)     # warmup/compile
+            jax.block_until_ready(logits)
+            t0 = time.perf_counter()
+            for _ in range(gen):
+                logits, cache = step(params, tok, cache)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            jax.block_until_ready(tok)
+            dt = time.perf_counter() - t0
+            res[backend] = {"tok_per_s": toks.shape[0] * gen / dt,
+                            "stats": dict(dispatch.STATS)}
+    return res
+
+
 def run(quick=False):
     key = jax.random.PRNGKey(0)
     rows = []
@@ -108,7 +189,18 @@ def run(quick=False):
     rows.append({"name": f"int_attention_h{h}_s{s}", "wall_us": us_attn,
                  "macs": attention_macs(h, s, s, d),
                  "t_compute_us": design["v5e_single_pass_compute_us"]})
-    return rows, design
+
+    # Decode: in-place ring-cache kernel vs XLA fallback (serving shapes:
+    # long full ring early in decode, and a windowed ring).
+    decode = {
+        "analytic": [
+            decode_step_analytic(8, 4, 8192, 1024, 128, 8),
+            decode_step_analytic(8, 4, 8192, 1024, 128, 4),
+            decode_step_analytic(8, 4, 8192, 512, 128, 8),   # window=512
+        ],
+        "loop": decode_loop(quick=quick),
+    }
+    return rows, design, decode
 
 
 def main(argv=None):
@@ -120,7 +212,7 @@ def main(argv=None):
                     help="smallest shapes only (CI-sized)")
     args = ap.parse_args(argv)
 
-    rows, design = run(quick=args.quick)
+    rows, design, decode = run(quick=args.quick)
     for r in rows:
         derived = " ".join(f"{k}={v:.1f}" for k, v in r.items()
                            if k not in ("name", "wall_us", "macs")
@@ -129,14 +221,27 @@ def main(argv=None):
     print(f"attention_design,s={design['s']},"
           f"two_pass_macs={design['two_pass_macs']},"
           f"single_pass_macs={design['single_pass_macs']}")
+    for a in decode["analytic"]:
+        print(f"decode_step,span={a['span']},live={a['live']},"
+              f"kv_bits={a['kv_bits']},"
+              f"xla_bytes={a['xla_bytes_per_step']},"
+              f"pallas_bytes={a['pallas_bytes_per_step']},"
+              f"decode_macs={a['decode_macs_per_step']},"
+              f"two_pass_macs={a['two_pass_macs_per_step']}")
+    for backend, r in decode["loop"].items():
+        st = r["stats"]
+        print(f"decode_loop[{backend}],{r['tok_per_s']:.2f} tok/s,"
+              f"decode_pallas={st['attention_decode_pallas']},"
+              f"attention_xla={st['attention_xla']}")
 
     if args.json:
         payload = {"kernels": rows, "attention_design": design,
+                   "decode": decode,
                    "device": jax.devices()[0].platform}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
-    return rows, design
+    return rows, design, decode
 
 
 if __name__ == "__main__":

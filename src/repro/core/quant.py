@@ -119,7 +119,21 @@ class QTensor:
     unsigned: bool = False  # static
 
     def dequant(self) -> jax.Array:
-        return dequantize(self.q, self.scale)
+        return dequantize(self.unpacked().q, self.scale)
+
+    @property
+    def is_packed(self) -> bool:
+        """Signed uint8 storage marks 2x4-bit nibble packing (the KV-cache/
+        weight convention); unsigned QTensors legitimately store uint8
+        codes.  The single source of truth for the packed-storage test."""
+        return self.q.dtype == jnp.uint8 and not self.unsigned
+
+    def unpacked(self) -> "QTensor":
+        """int8-coded view of a nibble-packed QTensor (no-op otherwise)."""
+        if self.is_packed:
+            return QTensor(unpack_int4(self.q), self.scale, self.bits,
+                           self.unsigned)
+        return self
 
     @property
     def shape(self):

@@ -15,24 +15,38 @@ Backend selection (checked at trace time, so switching requires a re-trace):
 2. ``REPRO_KERNEL_BACKEND`` env var / :func:`set_backend` /
    :func:`use_backend` — process-wide default (initially "xla");
 3. shape policy — even under "pallas", ops the kernels cannot express
-   (3D weight stacks, ring-buffer key positions, decode offsets, >7-bit
-   prob grids) fall back to XLA per call site.
+   (3D weight stacks, >8-bit prob grids, multi-query ring reads) fall
+   back to XLA per call site.
+
+Attention routes onto TWO kernels:
+
+- prefill / full-sequence calls (``q_offset == 0``, contiguous keys) fold
+  GQA/batch and run :func:`~repro.kernels.int_attention.int_attention_fused`
+  — including narrow local windows over long keys, which stream only their
+  bounded live span via the kernel's static block map
+  (``REPRO_PALLAS_WINDOW_VETO=1`` restores the old XLA fallback as an
+  escape hatch);
+- decode steps (Sq == 1 with ring-cache ``k_positions``) run
+  :func:`~repro.kernels.int_attention.int_decode_attention` over the int8/int4
+  ring cache *in place* — no dequantized or unpacked copy, and only ring
+  blocks holding live keys are DMA'd per step.
 
 ``REPRO_PALLAS_COMPILED=1`` runs the kernels compiled on a real TPU;
 otherwise they execute in interpret mode (correct everywhere, fast
 nowhere — which is why "xla" stays the default off-TPU).
 
 Parity with the XLA int path is exact (<= 1e-5) whenever one key block
-covers the row — ``attention_blocks`` prefers that and achieves it for
-Sk <= 4096 at default budget.  Beyond that the fused kernel streams codes
-on the running-m grid (see kernels/int_attention.py): outputs then differ
-from the full-row XLA grid by at most ~one prob code on early keys — the
-same order as the quantization error itself, and bit-identical to the
-``int_attention_ref_streamed`` oracle.
+covers the row — ``attention_blocks`` / ``decode_blocks`` prefer that and
+achieve it for Sk <= 4096 at default budget.  Beyond that the kernels
+stream codes on the running-m grid (see kernels/int_attention.py): outputs
+then differ from the full-row XLA grid by at most ~one prob code on early
+keys — the same order as the quantization error itself, and bit-identical
+to the streamed oracles in kernels/ref.py.
 
 :data:`STATS` counts pallas dispatches and XLA fallbacks per op at trace
 time; tests assert on it to prove the serving graph really runs the
-kernels.
+kernels (``attention_decode_pallas`` proves decode_step serves from the
+ring-cache kernel).
 """
 from __future__ import annotations
 
@@ -44,7 +58,8 @@ import jax.numpy as jnp
 
 from repro.core import quant
 from repro.core.softmax2 import LOG2E
-from repro.kernels.int_attention import int_attention_fused
+from repro.kernels.int_attention import (MAX_PROB_BITS, int_attention_fused,
+                                         int_decode_attention)
 from repro.kernels.qmatmul import qmatmul
 
 _VALID = ("xla", "pallas")
@@ -61,7 +76,8 @@ _backend = [_checked(os.environ.get("REPRO_KERNEL_BACKEND", "xla"),
                      "REPRO_KERNEL_BACKEND")]
 
 STATS = {"qlinear_pallas": 0, "qlinear_xla": 0,
-         "attention_pallas": 0, "attention_xla": 0}
+         "attention_pallas": 0, "attention_decode_pallas": 0,
+         "attention_xla": 0}
 
 
 def reset_stats():
@@ -98,6 +114,12 @@ def interpret_default() -> bool:
     return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
 
 
+def window_veto() -> bool:
+    """Escape hatch: REPRO_PALLAS_WINDOW_VETO=1 restores the pre-streaming
+    behaviour of sending narrow windows over long keys to the XLA path."""
+    return os.environ.get("REPRO_PALLAS_WINDOW_VETO", "0") == "1"
+
+
 # ---------------------------------------------------------------------------
 # Block-size heuristics (shape + VMEM budget instead of hard-coded tiles)
 # ---------------------------------------------------------------------------
@@ -111,6 +133,11 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+def _halve(x: int) -> int:
+    """Stay 128-aligned while shrinking."""
+    return max(_LANE, _round_up(x // 2, _LANE))
+
+
 def qmatmul_blocks(m: int, n: int, k: int, *,
                    budget: int = VMEM_BUDGET) -> tuple[int, int, int]:
     """(bm, bn, bk) for an (M,K) x (N,K)^T int8 matmul.
@@ -119,9 +146,6 @@ def qmatmul_blocks(m: int, n: int, k: int, *,
     out).  Prefer covering K in one step (single-shot accumulator, no
     revisits of the output tile), then grow bm/bn toward the MXU sweet spot.
     """
-    def _halve(x):                       # stay 128-aligned while shrinking
-        return max(_LANE, _round_up(x // 2, _LANE))
-
     bk = min(_round_up(k, _LANE), 2048)
     bm = min(_round_up(m, _LANE), 256)
     bn = min(_round_up(n, _LANE), 256)
@@ -135,20 +159,26 @@ def qmatmul_blocks(m: int, n: int, k: int, *,
     return bm, bn, bk
 
 
-def attention_blocks(sq: int, sk: int, d: int, *,
+def attention_blocks(sq: int, sk: int, d: int, *, window: Optional[int] = None,
                      budget: int = VMEM_BUDGET) -> tuple[int, int]:
     """(bq, bk) for the fused attention kernel.
 
     Tile VMEM ~ (bq + 2*bk)*d int8 operands + 9*bq*d f32 (out + carry) +
     5*bq*bk (f32 logits + int8 codes).  A single key block covering the
     whole row (bk >= Sk) additionally makes the online grid coincide with
-    the full-row reference, so prefer it while it fits.
+    the full-row reference, so prefer it while it fits.  Only for NARROW
+    local windows over long keys (Sk > 2*window — shapes that used to veto
+    pallas entirely) is bk instead capped near the ~(bq + window) live
+    span per query block: the static live-block map then DMAs 1-2 key
+    tiles per query block instead of the whole row.  Wider windows keep
+    the full-row-parity preference unchanged.
     """
-    def _halve(x):                       # stay 128-aligned while shrinking
-        return max(_LANE, _round_up(x // 2, _LANE))
-
     bq = min(_round_up(sq, _LANE), 256)
-    bk = min(_round_up(sk, _LANE), 4096)
+    narrow = window is not None and sk > 2 * window
+    cap = 4096
+    if narrow:
+        cap = min(cap, _round_up(bq + window, _LANE))
+    bk = min(_round_up(sk, _LANE), cap)
 
     def vmem(bq, bk):
         return (bq + 2 * bk) * d + 9 * bq * d + 5 * bq * bk
@@ -159,7 +189,25 @@ def attention_blocks(sq: int, sk: int, d: int, *,
         bq = _halve(bq)
     while vmem(bq, bk) > budget and bk > _LANE:
         bk = _halve(bk)
+    if narrow and bk < sk:
+        # The shrink loops may have halved bq below the cap's assumption;
+        # re-cap bk to the final live span (smaller bk is always VMEM-safe).
+        bk = min(bk, _round_up(bq + window, _LANE))
     return bq, bk
+
+
+def decode_blocks(span: int, d: int, *, budget: int = VMEM_BUDGET) -> int:
+    """bk for the decode kernel over a ``span``-slot ring cache.
+
+    Tile VMEM ~ 2*bk*d int8 K/V + 4*bk positions + ~17*8*d f32 q/out/carry.
+    Prefer one block over the whole ring (running grid == full-row grid,
+    bit-parity with the XLA path) up to the 4096 sweet spot; longer rings
+    stream in 4096-key blocks, of which only the live ones are DMA'd.
+    """
+    bk = min(_round_up(span, _LANE), 4096)
+    while 2 * bk * d + 4 * bk + 17 * 8 * d > budget and bk > _LANE:
+        bk = _halve(bk)
+    return bk
 
 
 # ---------------------------------------------------------------------------
@@ -206,18 +254,23 @@ def maybe_qlinear(x, p: dict, cfg):
 
 
 # ---------------------------------------------------------------------------
-# Attention: (B, H, S, D) GQA -> folded (B*Hkv, G*Sq, D) fused kernel
+# Attention: (B, H, S, D) GQA -> folded (B*Hkv, ...) kernels
 # ---------------------------------------------------------------------------
+
+def _is_packed(x) -> bool:
+    """Nibble-packed QTensor (int4 KV cache / weights convention)."""
+    return isinstance(x, quant.QTensor) and x.is_packed
+
 
 def attention_supported(q, k, spec, cfg, q_offset, k_offset,
                         k_positions) -> bool:
-    """Shape policy for the fused attention kernel.
+    """Shape policy for the fused (prefill) attention kernel.
 
     The kernel indexes keys 0..Sk-1 from position 0: ring caches
-    (``k_positions``) and decode offsets fall back to XLA, as do prob grids
-    wider than int8 codes allow.
+    (``k_positions``) and decode offsets go to :func:`decode_supported`
+    or fall back to XLA, as do prob grids wider than 8 bits.
     """
-    if cfg.attn_bits > 7:
+    if cfg.attn_bits > MAX_PROB_BITS:
         return False
     if getattr(cfg, "softmax", "base2") != "base2":
         return False              # kernels hardcode the shift-exp (Eq. 4)
@@ -226,50 +279,117 @@ def attention_supported(q, k, spec, cfg, q_offset, k_offset,
     if not (isinstance(q_offset, int) and q_offset == 0
             and isinstance(k_offset, int) and k_offset == 0):
         return False
-    if spec.window is not None and k.shape[2] > 2 * spec.window:
-        # Narrow local window over long keys: the XLA path slices each
-        # query chunk to ~(q_chunk + window) keys; the fused kernel would
-        # stream (and DMA) all Sk per query block.  Needs a bounded-kblk
-        # window kernel (ROADMAP) before dispatching here.
+    if _is_packed(q) or _is_packed(k):
+        return False              # packed reads are a decode-kernel feature
+    if (spec.window is not None and k.shape[2] > 2 * spec.window
+            and window_veto()):
+        # Escape hatch (REPRO_PALLAS_WINDOW_VETO=1): pre-streaming
+        # behaviour, where narrow local windows over long keys used the
+        # XLA path's key slicing.  The fused kernel's static live-block
+        # map now bounds the DMA itself, so the default is to dispatch.
         return False
     b, hq, sq, d = q.shape
     hkv = k.shape[1]
     return sq > 0 and k.shape[2] > 0 and hq % hkv == 0 and d > 0
 
 
+def decode_supported(q, k, spec, cfg, k_positions) -> bool:
+    """Shape policy for the single-query ring-cache decode kernel.
+
+    Sq must be 1 (the G GQA groups become the kernel's query rows) and the
+    ring slot->position map must be a shared (span,) vector — what
+    ``models.lm`` produces every decode step.
+    """
+    if cfg.attn_bits > MAX_PROB_BITS:
+        return False
+    if getattr(cfg, "softmax", "base2") != "base2":
+        return False
+    if k_positions is None or getattr(k_positions, "ndim", None) != 1:
+        return False
+    b, hq, sq, d = q.shape
+    if sq != 1 or d == 0 or k.shape[2] == 0:
+        return False
+    hkv = k.shape[1]
+    if hq % hkv:
+        return False
+    if _is_packed(k) and (k.bits != 4 or d % 2):
+        return False
+    return True
+
+
 def maybe_attention(q, k, v, spec, cfg, *, q_offset=0, k_offset=0,
                     k_positions=None):
     """Pallas-backed attention() body; ``None`` -> caller's XLA path.
 
-    Folds batch into the kernel's head grid axis and GQA groups along the
+    Decode steps (Sq == 1 + ring ``k_positions``) hit the in-place decode
+    kernel; everything else the fused prefill kernel, with per-site
+    fallback to XLA for shapes neither kernel expresses.
+    """
+    if resolve_backend(cfg) == "pallas":
+        if decode_supported(q, k, spec, cfg, k_positions):
+            STATS["attention_decode_pallas"] += 1
+            return _decode_call(q, k, v, spec, cfg, q_offset, k_positions)
+        if attention_supported(q, k, spec, cfg, q_offset, k_offset,
+                               k_positions):
+            STATS["attention_pallas"] += 1
+            return _fused_call(q, k, v, spec, cfg)
+    STATS["attention_xla"] += 1
+    return None
+
+
+def _as_q(x, bits):
+    return x if isinstance(x, quant.QTensor) \
+        else quant.quantize_tensor(x, bits)
+
+
+def _fused_call(q, k, v, spec, cfg):
+    """Fold batch into the kernel's head grid axis and GQA groups along the
     query rows (row r has position ``r % Sq`` via ``sq_mod``), quantizing
     float inputs per-tensor exactly like the XLA int path.  int8 KV-cache
-    QTensors stream in without a dequantized copy.
-    """
-    if resolve_backend(cfg) != "pallas" or not attention_supported(
-            q, k, spec, cfg, q_offset, k_offset, k_positions):
-        STATS["attention_xla"] += 1
-        return None
-    STATS["attention_pallas"] += 1
+    QTensors stream in without a dequantized copy."""
     b, hq, sq, d = q.shape
     hkv, sk = k.shape[1], k.shape[2]
     g = hq // hkv
     out_dtype = q.dtype if not isinstance(q, quant.QTensor) else jnp.float32
-
-    def as_q(x):
-        return x if isinstance(x, quant.QTensor) \
-            else quant.quantize_tensor(x, cfg.a_bits)
-
-    qq, kq, vq = as_q(q), as_q(k), as_q(v)
+    qq, kq, vq = (_as_q(x, cfg.a_bits) for x in (q, k, v))
     scale = spec.softmax_scale or (1.0 / d ** 0.5)
     sc = scale * LOG2E * qq.scale * kq.scale    # same assoc as the XLA path
     qf = qq.q.reshape(b, hkv, g, sq, d).reshape(b * hkv, g * sq, d)
     kf = kq.q.reshape(b * hkv, sk, d)
     vf = vq.q.reshape(b * hkv, sk, d)
-    bq, bk = attention_blocks(g * sq, sk, d)
+    bq, bk = attention_blocks(g * sq, sk, d, window=spec.window)
     out = int_attention_fused(qf, kf, vf, sc, vq.scale,
                               attn_bits=cfg.attn_bits, causal=spec.causal,
                               window=spec.window, bq=bq, bk=bk, sq_mod=sq,
                               interpret=interpret_default())
     out = out.reshape(b, hkv, g, sq, d).reshape(b, hq, sq, d)
     return out.astype(out_dtype)
+
+
+def _decode_call(q, k, v, spec, cfg, q_offset, k_positions):
+    """One decode step on the ring-cache kernel.
+
+    The cache's packed codes go to the kernel exactly as stored (int8, or
+    int4 nibbles with ``packed=True``) — the in-place read the tentpole is
+    about: no unpacked/dequantized HBM copy, and only live ring blocks are
+    DMA'd.  ``q_offset`` is the (possibly traced) absolute query position.
+    """
+    b, hq, _, d = q.shape
+    hkv, span = k.shape[1], k.shape[2]
+    g = hq // hkv
+    out_dtype = q.dtype if not isinstance(q, quant.QTensor) else jnp.float32
+    qq, kq, vq = (_as_q(x, cfg.a_bits) for x in (q, k, v))
+    packed = _is_packed(kq)
+    scale = spec.softmax_scale or (1.0 / d ** 0.5)
+    sc = scale * LOG2E * qq.scale * kq.scale    # same assoc as the XLA path
+    qf = qq.q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    kf = kq.q.reshape(b * hkv, span, -1)
+    vf = vq.q.reshape(b * hkv, span, -1)
+    bk = decode_blocks(span, d)
+    out = int_decode_attention(qf, kf, vf, sc, vq.scale,
+                               jnp.asarray(k_positions, jnp.int32),
+                               q_offset, attn_bits=cfg.attn_bits,
+                               causal=spec.causal, window=spec.window,
+                               bk=bk, packed=packed,
+                               interpret=interpret_default())
+    return out.reshape(b, hq, 1, d).astype(out_dtype)

@@ -17,27 +17,39 @@ ints < 2^24 exactly and power-of-two rescales only touch the exponent), so
 the rescale chain is exact; each block's PV contraction itself runs on the
 MXU in int8 x int8 -> int32.
 
-Two kernels share that quantizer:
+Three kernels share that quantizer:
 
 - :func:`int_attention` — the original TWO-PASS design: a stats pass
   computes Sigma (one QK^T sweep), then a PV pass recomputes QK^T per tile,
   quantizes, and accumulates integer PV.  3*H*Sq*Sk*D MXU MACs, K read
-  twice per query block.
-- :func:`int_attention_fused` — SINGLE-PASS online kernel (this PR's
+  twice per query block.  Kept as the measured baseline.
+- :func:`int_attention_fused` — SINGLE-PASS online kernel (the prefill
   serving path): batch*head and query blocks span the grid, K/V tiles
   stream through VMEM once while running (m, Sigma) and the PV carry
-  advance together.  2*H*Sq*Sk*D MACs — one QK^T per tile — and half the
-  K-tile HBM reads of the two-pass design.
+  advance together.  Key tiles are visited through a STATIC live-block map
+  (scalar-prefetch index map): causal upper-triangle, out-of-window and
+  padded key tiles are never DMA'd at all, so local attention streams only
+  the ~(bq + window) live keys per query block instead of all Sk.
+- :func:`int_decode_attention` — SINGLE-QUERY decode kernel (the per-token
+  serving path): reads the int8 / int4-nibble-packed KV *ring cache in
+  place*.  ``k_positions[j]`` gives ring slot ``j``'s absolute position
+  (negative = unwritten); a RUNTIME live-block map (scalar-prefetched, so
+  the index map sees it before the body runs) DMAs only ring blocks that
+  hold a key inside the causal/window span of the current position.  GQA
+  query groups ride along as the G query rows of a single MXU tile.
 
-Both emit bit-identical outputs (same running-m code sequence, same f32
-accumulation order); :func:`~repro.kernels.ref.int_attention_ref_streamed`
-is the jnp oracle for any ``bk``, and the full-row oracle/XLA serving path
-coincide whenever one key block covers the row (``bk >= Sk`` — what the
-dispatch block heuristics pick for model-sized sequences).
+Skipping a fully-masked key block is bit-exact: it contributes ``e = 0``
+to every carry and cannot raise the running ``m`` — which is why both block
+maps (static for prefill, runtime for decode) drop dead tiles without
+changing the emitted code sequence.
 
-``attn_bits <= 7`` so prob codes fit int8 (documented deviation: the
-paper's 8-bit unsigned probs use the XLA path).  int32 per-block PV
-accumulation is safe while ``attn_bits + 7 + log2(bk) <= 31``.
+Prob codes are carried in int8 for the MXU.  ``attn_bits <= 7`` codes are
+stored as-is; ``attn_bits == 8`` codes (the paper's unsigned uint8 grid)
+are stored biased by -128 and the PV contraction adds the exact
+``128 * colsum(v)`` correction per tile (``sum_j p_j v_j ==
+sum_j (p_j - 128) v_j + 128 * sum_j v_j``, all in int32), closing the
+8-bit paper-parity gap without leaving the integer path.  int32 per-block
+PV accumulation is safe while ``attn_bits + 7 + log2(bk) + 1 <= 32``.
 
 ``interpret=True`` (default) validates on CPU; set ``REPRO_PALLAS_COMPILED=1``
 (see kernels/dispatch.py) to run the compiled MXU path on TPU.
@@ -48,10 +60,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.qmatmul import _unpack_nibbles
+
 NEG = -1e30
+MAX_PROB_BITS = 8
 
 
 def _exp2_shift(x):
@@ -84,15 +100,94 @@ def _tile_logits(q_ref, k_ref, sc_ref, valid):
 
 
 def _online_update(x, m_ref, qmax):
-    """Advance running m, emit this tile's codes + rescale factor + e-sum."""
+    """Advance running m, emit this tile's codes + rescale factor + e-sum.
+
+    8-bit grids (qmax = 255) store codes biased by -128 so they fit the
+    MXU's int8 operands; :func:`_pv_dot` adds the exact un-bias term.
+    """
     m_old = m_ref[...]
     m_new = jnp.maximum(m_old, jnp.floor(jnp.max(x, axis=-1)))
     e = jnp.where(x <= -120.0, 0.0, _exp2_shift(x - m_new[:, None]))
-    p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax).astype(jnp.int8)
+    p = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
+    if qmax > 127:                   # biased uint8-as-int8 storage
+        p = p - 128.0
+    p_q = p.astype(jnp.int8)
     r = jnp.exp2(m_old - m_new)      # exact: both integers (or -inf -> 0)
     m_ref[...] = m_new
     return e, p_q, r
 
+
+def _pv_dot(p_q, v, qmax):
+    """Integer PV contraction; exact un-bias for 8-bit biased codes.
+
+    ``sum_j p_j v_j == sum_j (p_j - 128) v_j + 128 * sum_j v_j`` holds per
+    row in int32 because masked keys carry real code 0 (stored -128), so
+    their two terms cancel exactly.
+    """
+    pv = jnp.dot(p_q, v, preferred_element_type=jnp.int32)
+    if qmax > 127:
+        pv = pv + 128 * jnp.sum(v.astype(jnp.int32), axis=0)[None, :]
+    return pv
+
+
+# ---------------------------------------------------------------------------
+# Live-block maps (bounded-key streaming)
+# ---------------------------------------------------------------------------
+
+def _live_kblock_meta(nq, nk, bq, bk, sq_mod, sk, causal, window):
+    """STATIC per-query-block key-tile map for the fused prefill kernel.
+
+    Row i is ``[n_live, kblk ids of live tiles ascending, last id
+    repeated]``.  A tile is live iff any (q row, key) pair in it passes
+    :func:`_mask`; repeating the last id means dead grid steps re-map the
+    previous block, so Pallas issues no DMA for them.  Returns
+    ``(meta (nq, 1 + nt) int32, nt)`` with ``nt = max live tiles per row``.
+    """
+    q_pos = np.arange(nq * bq) % sq_mod
+    lo = (np.maximum(q_pos - (window - 1), 0) if window is not None
+          else np.zeros_like(q_pos))
+    hi = (np.minimum(q_pos, sk - 1) if causal
+          else np.full_like(q_pos, sk - 1))
+    kb = np.arange(nk)
+    live = ((lo[:, None] <= kb[None, :] * bk + bk - 1)
+            & (hi[:, None] >= kb[None, :] * bk)
+            & (lo <= hi)[:, None]).reshape(nq, bq, nk).any(axis=1)
+    nt = max(int(live.sum(axis=1).max()), 1)
+    meta = np.zeros((nq, 1 + nt), np.int32)
+    for i in range(nq):
+        ids = np.nonzero(live[i])[0]
+        meta[i, 0] = len(ids)
+        if len(ids) == 0:
+            ids = np.array([0])
+        meta[i, 1:1 + len(ids)] = ids
+        meta[i, 1 + len(ids):] = ids[-1]
+    return jnp.asarray(meta), nt
+
+
+def _decode_meta(k_positions, pos, nk, bk, causal, window):
+    """RUNTIME ring-block map for the decode kernel.
+
+    ``[pos, n_live, live block ids ascending (dead steps repeat the last
+    live id -> no DMA)]``.  A ring block is live iff any of its slots holds
+    a written key (position >= 0) inside the causal/window span of ``pos``.
+    """
+    valid = k_positions >= 0
+    if causal:
+        valid &= k_positions <= pos
+    if window is not None:
+        valid &= k_positions > pos - window
+    blk = valid.reshape(nk, bk).any(axis=1)
+    order = jnp.argsort(~blk).astype(jnp.int32)     # stable: live ids first
+    n_live = jnp.sum(blk).astype(jnp.int32)
+    last = order[jnp.clip(n_live - 1, 0, nk - 1)]
+    kmap = jnp.where(jnp.arange(nk) < n_live, order, last)
+    return jnp.concatenate(
+        [jnp.stack([pos, n_live]).astype(jnp.int32), kmap])
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
 
 def _stats_kernel(q_ref, k_ref, sc_ref, s_ref, mb_ref, sb_ref, *,
                   nk, bq, bk, sq_mod, sk, causal, window, qmax):
@@ -135,7 +230,7 @@ def _pv_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, s_ref, o_ref,
     def _compute():
         x = _tile_logits(q_ref, k_ref, sc_ref, valid)
         _, p_q, r = _online_update(x, mb_ref, qmax)
-        pv = jnp.dot(p_q, v_ref[0], preferred_element_type=jnp.int32)
+        pv = _pv_dot(p_q, v_ref[0], qmax)
         acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
 
     @pl.when(kblk == nk - 1)
@@ -144,33 +239,80 @@ def _pv_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, s_ref, o_ref,
         o_ref[0] = acc_ref[...] * (dattn * vs_ref[0, 0])
 
 
-def _fused_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, o_ref,
-                  mb_ref, sb_ref, acc_ref, *, nk, bq, bk, sq_mod, sk, causal,
+def _fused_kernel(meta_ref, q_ref, k_ref, v_ref, sc_ref, vs_ref, o_ref,
+                  mb_ref, sb_ref, acc_ref, *, nt, bq, bk, sq_mod, sk, causal,
                   window, qmax):
-    i, kblk = pl.program_id(1), pl.program_id(2)
+    i, t = pl.program_id(1), pl.program_id(2)
 
-    @pl.when(kblk == 0)
+    @pl.when(t == 0)
     def _init():
         mb_ref[...] = jnp.full_like(mb_ref, NEG)
         sb_ref[...] = jnp.zeros_like(sb_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # The key tile in VMEM is meta[i, 1 + t], not t: dead tiles were never
+    # DMA'd.  Guard on liveness so the repeated tail entries do not double
+    # count their block.
+    kblk = meta_ref[i, 1 + t]
+    live = t < meta_ref[i, 0]
     valid = _mask(i, kblk, bq, bk, sq_mod, sk, causal, window)
 
-    @pl.when(jnp.any(valid))
+    @pl.when(live & jnp.any(valid))
     def _compute():
         x = _tile_logits(q_ref, k_ref, sc_ref, valid)
         e, p_q, r = _online_update(x, mb_ref, qmax)
-        pv = jnp.dot(p_q, v_ref[0], preferred_element_type=jnp.int32)
+        pv = _pv_dot(p_q, v_ref[0], qmax)
         sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
         acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
 
-    @pl.when(kblk == nk - 1)
+    @pl.when(t == nt - 1)
     def _out():
         s = jnp.maximum(sb_ref[...], 1e-30)[:, None]
         dattn = (2.0 / qmax) / s
         o_ref[0] = acc_ref[...] * (dattn * vs_ref[0, 0])
 
+
+def _decode_kernel(meta_ref, q_ref, k_ref, v_ref, kp_ref, sc_ref, vs_ref,
+                   o_ref, mb_ref, sb_ref, acc_ref, *, nt, causal, window,
+                   qmax, packed):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        mb_ref[...] = jnp.full_like(mb_ref, NEG)
+        sb_ref[...] = jnp.zeros_like(sb_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = meta_ref[0]
+    live = t < meta_ref[1]
+    kp = kp_ref[0, :]                    # ring positions of this key tile
+    valid = kp >= 0                      # negative = unwritten slot
+    if causal:
+        valid &= kp <= pos
+    if window is not None:
+        valid &= kp > pos - window
+
+    @pl.when(live & jnp.any(valid))
+    def _compute():
+        k = _unpack_nibbles(k_ref[0]) if packed else k_ref[0]
+        v = _unpack_nibbles(v_ref[0]) if packed else v_ref[0]
+        acc = jnp.dot(q_ref[0], k.T, preferred_element_type=jnp.int32)
+        x = acc.astype(jnp.float32) * sc_ref[0, 0]
+        x = jnp.maximum(jnp.where(valid[None, :], x, NEG), -120.0)
+        e, p_q, r = _online_update(x, mb_ref, qmax)
+        pv = _pv_dot(p_q, v, qmax)
+        sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
+        acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _out():
+        s = jnp.maximum(sb_ref[...], 1e-30)[:, None]
+        o_ref[0] = acc_ref[...] * ((2.0 / qmax) / s * vs_ref[0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Wrappers
+# ---------------------------------------------------------------------------
 
 def _prep(q_q, k_q, v_q, sc, v_scale, bq, bk):
     h, sq, d = q_q.shape
@@ -211,7 +353,8 @@ def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
     accumulates integer PV.  Kept as the measured baseline the single-pass
     kernel improves on: 3 MXU sweeps and 2x K-tile HBM reads.
     """
-    assert attn_bits <= 7, "int8 prob codes need attn_bits <= 7"
+    assert attn_bits <= MAX_PROB_BITS, \
+        f"prob codes are <= {MAX_PROB_BITS}-bit (int8 carried, 8-bit biased)"
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
     qmax = float((1 << attn_bits) - 1)
@@ -250,40 +393,134 @@ def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
 def int_attention_fused(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
                         causal=True, window=None, bq=128, bk=128,
                         sq_mod=None, interpret=True):
-    """SINGLE-PASS fused integer attention (the serving kernel).
+    """SINGLE-PASS fused integer attention (the prefill serving kernel).
 
     Same contract as :func:`int_attention`.  One sweep over K/V per query
     block: each tile's QK^T feeds the running (m, Sigma) update AND the
     quantized PV accumulation, so every K/V tile is read from HBM and
     pushed through the MXU exactly once — 2*H*Sq*Sk*D MACs vs the
     two-pass design's 3*H*Sq*Sk*D.
+
+    Key tiles stream through a static live-block map (scalar-prefetch
+    index map, :func:`_live_kblock_meta`): dead tiles — causal upper
+    triangle, beyond the local window, key padding — are neither DMA'd nor
+    visited, so windowed rows stream only their bounded live span.
     """
-    assert attn_bits <= 7, "int8 prob codes need attn_bits <= 7"
+    assert attn_bits <= MAX_PROB_BITS, \
+        f"prob codes are <= {MAX_PROB_BITS}-bit (int8 carried, 8-bit biased)"
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
     qmax = float((1 << attn_bits) - 1)
     q_q, k_q, v_q, sc2, vs2, nq, nk = _prep(q_q, k_q, v_q, sc, v_scale,
                                             bq, bk)
-    sp = _specs(bq, bk, d)
-
-    out = pl.pallas_call(
-        functools.partial(_fused_kernel, nk=nk, bq=bq, bk=bk,
-                          sq_mod=sq_mod or sq, sk=sk, causal=causal,
-                          window=window, qmax=qmax),
-        grid=(h, nq, nk),
-        in_specs=[sp["qspec"], sp["kspec"], sp["kspec"], sp["sspec"],
-                  sp["sspec"]],
-        out_specs=sp["qspec"],
-        out_shape=jax.ShapeDtypeStruct((h, nq * bq, d), jnp.float32),
+    meta, nt = _live_kblock_meta(nq, nk, bq, bk, sq_mod or sq, sk, causal,
+                                 window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(h, nq, nt),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, t, m: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, t, m: (h, m[i, 1 + t], 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, t, m: (h, m[i, 1 + t], 0)),
+            pl.BlockSpec((1, 1), lambda h, i, t, m: (0, 0)),
+            pl.BlockSpec((1, 1), lambda h, i, t, m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, t, m: (h, i, 0)),
         scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
                         pltpu.VMEM((bq,), jnp.float32),
                         pltpu.VMEM((bq, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, nt=nt, bq=bq, bk=bk,
+                          sq_mod=sq_mod or sq, sk=sk, causal=causal,
+                          window=window, qmax=qmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((h, nq * bq, d), jnp.float32),
         interpret=interpret,
-    )(q_q, k_q, v_q, sc2, vs2)
+    )(meta, q_q, k_q, v_q, sc2, vs2)
     return out[:, :sq]
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "attn_bits", "causal", "window", "bk", "packed", "interpret"))
+def int_decode_attention(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
+                         attn_bits=7, causal=True, window=None, bk=128,
+                         packed=False, interpret=True):
+    """Single-query integer decode attention over a KV ring cache, in place.
+
+    q_q: (H, G, D) int8 — the G GQA query groups of one decode step as MXU
+    rows (all share query position ``pos``).  k_q, v_q: the ring cache as
+    stored — (H, span, D) int8, or (H, span, D//2) uint8 nibbles with
+    ``packed=True`` (unpacked on the VPU per tile; HBM reads stay halved).
+    ``k_positions``: (span,) int32, ring slot j's absolute position
+    (negative = unwritten slot, masked).  ``pos``: scalar int32 query
+    position (may be traced).  ``sc`` = softmax_scale * dq * dk * log2(e);
+    ``v_scale`` = dv.  Returns (H, G, D) f32.
+
+    Bounded-key streaming: a runtime block map (:func:`_decode_meta`,
+    scalar-prefetched so index maps see it) DMAs only ring blocks holding a
+    live key — early decode over a long ring reads ~(pos/span) of the
+    cache, windowed decode only the window span.  Blocks stream in slot
+    order on the running-m grid; with one block covering the ring
+    (``bk >= span``, what dispatch prefers) the grid coincides with the
+    full-row XLA path bit-for-bit.
+    """
+    assert attn_bits <= MAX_PROB_BITS, \
+        f"prob codes are <= {MAX_PROB_BITS}-bit (int8 carried, 8-bit biased)"
+    h, g, d = q_q.shape
+    span = k_q.shape[1]
+    if packed:
+        assert d % 2 == 0 and k_q.shape[-1] * 2 == d, (q_q.shape, k_q.shape)
+    qmax = float((1 << attn_bits) - 1)
+    nk = -(-span // bk)
+    pad = nk * bk - span
+    if pad:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pad), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=-1)
+    pg = (-g) % 8                       # f32 sublane alignment for scratch
+    if pg:
+        q_q = jnp.pad(q_q, ((0, 0), (0, pg), (0, 0)))
+    gq = g + pg
+    k_positions = k_positions.astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    meta = _decode_meta(k_positions, pos, nk, bk, causal, window)
+    kp2 = k_positions.reshape(1, nk * bk)
+    sc2 = jnp.asarray(sc, jnp.float32).reshape(1, 1)
+    vs2 = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
+    dk = k_q.shape[-1]                  # d, or d//2 when nibble-packed
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(h, nk),
+        in_specs=[
+            pl.BlockSpec((1, gq, d), lambda h, t, m: (h, 0, 0)),
+            pl.BlockSpec((1, bk, dk), lambda h, t, m: (h, m[2 + t], 0)),
+            pl.BlockSpec((1, bk, dk), lambda h, t, m: (h, m[2 + t], 0)),
+            pl.BlockSpec((1, bk), lambda h, t, m: (0, m[2 + t])),
+            pl.BlockSpec((1, 1), lambda h, t, m: (0, 0)),
+            pl.BlockSpec((1, 1), lambda h, t, m: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gq, d), lambda h, t, m: (h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((gq,), jnp.float32),
+                        pltpu.VMEM((gq,), jnp.float32),
+                        pltpu.VMEM((gq, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, nt=nk, causal=causal,
+                          window=window, qmax=qmax, packed=packed),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((h, gq, d), jnp.float32),
+        interpret=interpret,
+    )(meta, q_q, k_q, v_q, kp2, sc2, vs2)
+    return out[:, :g]
+
+
 def attention_macs(h, sq, sk, d, *, design="single"):
-    """Analytic MXU MAC count per kernel call (both int8 contractions)."""
+    """Analytic MXU MAC count per kernel call (both int8 contractions).
+
+    ``design="decode"`` counts one decode step over ``sk`` *live* keys
+    (single sweep, same as the fused kernel's 2 contractions per key).
+    """
     qk = h * sq * sk * d
-    return {"single": 2 * qk, "two_pass": 3 * qk}[design]
+    return {"single": 2 * qk, "decode": 2 * qk, "two_pass": 3 * qk}[design]

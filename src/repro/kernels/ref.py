@@ -31,6 +31,13 @@ Two oracles are provided for attention:
   consumed in ``bk``-sized blocks and every block's codes are quantized
   against the *running* ``m``.  Bit-matches the Pallas kernels for any
   ``bk``.
+- :func:`int_decode_attention_ref` — the decode oracle: one query position
+  against a KV *ring cache* whose slot->position map is ``k_positions``
+  (negative = unwritten).  ``bk=None`` gives full-row semantics (the XLA
+  decode path); an integer ``bk`` streams ring blocks in slot order on the
+  running grid, bit-matching ``kernels.int_decode_attention`` for any
+  ``bk`` (the kernel's live-block skipping is bit-exact: a fully-masked
+  block contributes e = 0 and cannot raise the running ``m``).
 """
 from __future__ import annotations
 
@@ -131,6 +138,63 @@ def int_attention_ref_streamed(q_q, k_q, v_q, sc, v_scale, *, bk,
     (m, s, pv), _ = jax.lax.scan(block, init, jnp.arange(nk))
     dattn = (2.0 / qmax) / jnp.maximum(s, 1e-30)
     return pv * (dattn * v_scale)
+
+
+def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
+                             attn_bits=7, causal=True, window=None, bk=None):
+    """Decode-step oracle: (H, G, D) query row vs an (H, span, D) ring cache.
+
+    ``k_positions`` (span,) maps ring slot -> absolute position (negative =
+    unwritten, masked); all G GQA rows share query position ``pos``.
+    ``bk=None``: full-row grid (== the XLA serving path).  Integer ``bk``:
+    ring blocks stream in slot order, each quantized at the running grid —
+    bit-matches the Pallas decode kernel.
+    """
+    h, g, d = q_q.shape
+    span = k_q.shape[1]
+    qmax = (1 << attn_bits) - 1
+    mask = k_positions >= 0
+    if causal:
+        mask &= k_positions <= pos
+    if window is not None:
+        mask &= k_positions > pos - window
+    acc = jnp.einsum("hgd,hkd->hgk", q_q.astype(jnp.int32),
+                     k_q.astype(jnp.int32))
+    x = acc.astype(jnp.float32) * sc
+    x = jnp.maximum(jnp.where(mask[None, None, :], x, -1e30), -120.0)
+
+    if bk is None:                                # full-row grid
+        m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))
+        e = jnp.where(x <= -120.0, 0.0, exp2_shift(x - m))
+        s = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
+        pv = jnp.einsum("hgk,hkd->hgd", p_q.astype(jnp.int32),
+                        v_q.astype(jnp.int32))
+        return pv.astype(jnp.float32) * ((2.0 / qmax) / s * v_scale)
+
+    pad = (-span) % bk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)), constant_values=-120.0)
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad), (0, 0)))
+    nk = (span + pad) // bk
+
+    def block(carry, t):
+        m_old, s_run, pv = carry
+        xb = jax.lax.dynamic_slice_in_dim(x, t * bk, bk, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v_q, t * bk, bk, axis=1)
+        m_new = jnp.maximum(m_old, jnp.floor(jnp.max(xb, -1, keepdims=True)))
+        e = jnp.where(xb <= -120.0, 0.0, exp2_shift(xb - m_new))
+        p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
+        r = jnp.exp2(m_old - m_new)               # exact: both integers
+        blk = jnp.einsum("hgk,hkd->hgd", p_q.astype(jnp.int32),
+                         vb.astype(jnp.int32))
+        return (m_new, s_run * r + jnp.sum(e, -1, keepdims=True),
+                pv * r + blk.astype(jnp.float32)), None
+
+    init = (jnp.full((h, g, 1), -1e30), jnp.zeros((h, g, 1)),
+            jnp.zeros((h, g, d)))
+    (_, s, pv), _ = jax.lax.scan(block, init, jnp.arange(nk))
+    return pv * ((2.0 / qmax) / jnp.maximum(s, 1e-30) * v_scale)
 
 
 def pq_layernorm_ref(x, gamma, beta, delta, *, bits=8, eps=1e-6,

@@ -1,9 +1,15 @@
 """Serving driver: integerized batched inference (prefill + decode loop).
 
 The serving graph is the paper's contribution: weights stored as low-bit
-codes, integer matmuls with reordered dequantization, int8 KV cache,
-base-2 embedded softmax.  ``--mode float`` runs the Q-ViT-style dequantize-
-first baseline for comparison.
+codes, integer matmuls with reordered dequantization, int8 KV cache (read
+in place by the Pallas decode kernel under ``--backend pallas``), base-2
+embedded softmax.  ``--mode float`` runs the Q-ViT-style dequantize-first
+baseline for comparison.
+
+The run always prints the kernel-dispatch STATS line: in CI it is the
+regression signal that the serving graph really traced onto the Pallas
+kernels (``attention_decode_pallas`` > 0 for the decode loop) instead of
+silently falling back to XLA.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import QuantConfig, integerize_params
+from repro.kernels import dispatch
 from repro.models import lm
 
 
@@ -42,32 +49,43 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
     t_decode = time.perf_counter() - t0
     return (jnp.concatenate(out, axis=1),
             {"prefill_s": t_prefill, "decode_s": t_decode,
-             "tok_per_s": b * gen_tokens / max(t_decode, 1e-9)})
+             "tok_per_s": b * gen_tokens / max(t_decode, 1e-9),
+             "dispatch": dict(dispatch.STATS)})
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-32b")
     ap.add_argument("--mode", choices=["int", "float"], default="int")
+    ap.add_argument("--backend", choices=["xla", "pallas"], default=None,
+                    help="kernel backend for the int serving graph "
+                         "(default: REPRO_KERNEL_BACKEND / xla)")
     ap.add_argument("--wbits", type=int, default=4)
+    ap.add_argument("--kv-bits", type=int, default=8, choices=[4, 8])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args(argv)
+    if args.backend:
+        dispatch.set_backend(args.backend)
 
     from repro.configs.registry import smoke_config
     cfg = smoke_config(args.arch)
     key = jax.random.PRNGKey(0)
     params = lm.init_params(key, cfg)
     if args.mode == "int":
-        qc = QuantConfig(w_bits=args.wbits, a_bits=8, attn_bits=7, mode="int")
+        qc = QuantConfig(w_bits=args.wbits, a_bits=8, attn_bits=7,
+                         kv_bits=args.kv_bits, mode="int")
         params = integerize_params(params, qc)
         cfg = cfg.replace(quant=qc)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab).astype(jnp.int32)
+    dispatch.reset_stats()
     toks, stats = serve(cfg, params, prompts, gen_tokens=args.gen)
     print(f"[serve:{args.mode}] prefill {stats['prefill_s']:.3f}s  "
           f"decode {stats['decode_s']:.3f}s  {stats['tok_per_s']:.1f} tok/s")
+    print("[dispatch] " + "  ".join(f"{k}={v}"
+                                    for k, v in stats["dispatch"].items()))
     print("sample:", toks[0, :12].tolist())
 
 

@@ -21,6 +21,14 @@ backend active (see :mod:`repro.kernels.dispatch`) supported shapes route
 to the fused single-pass Pallas kernel instead, which quantizes q/k/v once
 per tensor (the XLA path re-calibrates per query chunk when Sq > q_chunk —
 identical whenever one chunk covers the queries).
+
+Serving KV-cache contract (in-place ring reads): decode callers hand k/v
+over as the cache stores them — int8-coded ``QTensor``s, or int4
+nibble-packed ``QTensor``s (uint8 codes, ``bits == 4``) — together with
+``k_positions``, the (span,) ring slot->absolute-position map (negative =
+unwritten slot).  The Pallas decode kernel consumes that storage format
+directly; only the XLA fallback unpacks nibbles (to int8 codes — never to
+float) before its einsums.
 """
 from __future__ import annotations
 
@@ -108,8 +116,9 @@ def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
         # the streaming Pallas kernel (see kernels/ref.py).
         qmax = (1 << cfg.attn_bits) - 1
         dattn = (2.0 / qmax) / sigma                        # prob-domain step
-        # Unsigned codes; int32 container in the XLA path (the Pallas kernel
-        # keeps probs in int8 for the MXU, which needs attn_bits <= 7).
+        # Unsigned codes; int32 container in the XLA path (the Pallas
+        # kernels carry them in int8 for the MXU — 8-bit grids biased by
+        # -128 with an exact un-bias in the PV epilogue).
         p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax).astype(
             ACC_DTYPE)
         pv = jnp.einsum("bhgqk,bhkd->bhgqd", p_q, vq.q,
@@ -152,17 +161,24 @@ def attention(q, k, v, spec: AttnSpec, cfg: Optional[QuantConfig] = None, *,
     """Multi-head attention with GQA, chunked over queries.
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) float arrays or QTensors
-    (int8 KV cache flows in without a dequantized copy); Hq % Hkv == 0.
-    ``q_offset`` gives absolute query positions (decode: cache length);
-    ``k_positions`` (Sk,) overrides key positions for ring caches (negative
-    entries mark unwritten slots and are masked).  Returns (B, Hq, Sq, D).
+    (int8 — or int4 nibble-packed — KV cache flows in as stored, without a
+    dequantized copy); Hq % Hkv == 0.  ``q_offset`` gives absolute query
+    positions (decode: cache length); ``k_positions`` (Sk,) overrides key
+    positions for ring caches (negative entries mark unwritten slots and
+    are masked).  Returns (B, Hq, Sq, D).
     """
     if cfg is not None and cfg.mode == "int":
         from repro.kernels.dispatch import maybe_attention
         out = maybe_attention(q, k, v, spec, cfg, q_offset=q_offset,
                               k_offset=k_offset, k_positions=k_positions)
-        if out is not None:                    # Pallas fused kernel path
+        if out is not None:                    # Pallas kernel path
             return out
+    # XLA fallback: nibble-packed cache QTensors unpack to int8 codes here
+    # (the Pallas decode kernel above reads the packed bytes in place).
+    if isinstance(k, quant.QTensor):
+        k = k.unpacked()
+    if isinstance(v, quant.QTensor):
+        v = v.unpacked()
     b, hq, sq, d = q.shape
     hkv = k.shape[1]
     g = hq // hkv

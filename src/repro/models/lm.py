@@ -7,6 +7,16 @@ essential for compile times at 1000+-chip scale and 60+-layer models.
 
 Serving uses an int8-quantized KV cache and the paper's integerized
 attention/linear path when ``cfg.quant.mode == "int"``.
+
+In-place KV ring-cache contract (decode): the cache stores k/v exactly as
+attention consumes them — int8 codes with per-tensor ``k_scale``/``v_scale``
+(or uint8 nibble-packed int4 when ``kv_bits == 4``) in a ring of ``span``
+slots where position ``p`` lives at slot ``p % span``.  Each decode step
+writes the new key/value into its slot and hands the *whole stored ring*
+to :func:`repro.layers.attention.attention` as a ``QTensor`` plus the
+``k_positions`` slot->position map (negative = unwritten).  Nothing is
+unpacked or dequantized here: the Pallas decode kernel reads the packed
+ring in place and streams only live blocks; only the XLA fallback unpacks.
 """
 from __future__ import annotations
 
@@ -232,7 +242,7 @@ def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode):
         slot = pos % span
         kv4 = mode == "int" and qcfg.kv_bits == 4
         if kv4:
-            from repro.core.quant import pack_int4, qrange, unpack_int4
+            from repro.core.quant import pack_int4, qrange
             qmin, qmax = qrange(4)
             kq = pack_int4(jnp.squeeze(jnp.clip(
                 jnp.round(k / cache["k_scale"]), qmin, qmax
@@ -251,9 +261,11 @@ def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode):
         cv = jax.lax.dynamic_update_index_in_dim(cache["v"], vq, slot, 2)
         new_cache = dict(cache, k=ck, v=cv)
         if kv4:
-            from repro.core.quant import unpack_int4
-            k_all = QTensor(unpack_int4(ck), cache["k_scale"], 4)
-            v_all = QTensor(unpack_int4(cv), cache["v_scale"], 4)
+            # Packed nibbles go to attention as stored (uint8 marks the
+            # packing); the decode kernel reads them in place and the XLA
+            # fallback unpacks to int8 codes — never a float copy.
+            k_all = QTensor(ck, cache["k_scale"], 4)
+            v_all = QTensor(cv, cache["v_scale"], 4)
         elif mode == "int":
             k_all = QTensor(ck, cache["k_scale"], qcfg.kv_bits)
             v_all = QTensor(cv, cache["v_scale"], qcfg.kv_bits)

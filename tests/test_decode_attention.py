@@ -1,0 +1,232 @@
+"""Ring-cache decode kernel: in-place reads, bounded streaming, dispatch.
+
+The decode kernel must serve the KV ring cache exactly as ``models.lm``
+stores it: ``k_positions[j]`` maps ring slot j to its absolute position
+(negative = unwritten), wrap-around puts position p at slot ``p % span``,
+GQA groups fold into the kernel's query rows, and int4 caches stay
+nibble-packed all the way into VMEM.  Oracle comparisons are exact
+(atol 1e-5 relative — the integer contractions are bit-identical and only
+f32 reduction order can differ); dispatch-level tests additionally assert
+via STATS that ``decode_step`` really traced onto the kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import QuantConfig, integerize_params
+from repro.core.quant import QTensor, pack_int4
+from repro.kernels import dispatch, ref
+from repro.kernels.int_attention import int_decode_attention
+from repro.layers.attention import AttnSpec, attention
+from repro.models import lm
+
+
+def _rel_close(a, b, tol=1e-5):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    scale = np.abs(b).max() + 1e-9
+    np.testing.assert_allclose(a / scale, b / scale, atol=tol)
+
+
+def _ring(span, pos):
+    """Slot->position map the LM builds: slot(p) = p % span."""
+    j = jnp.arange(span)
+    return pos - jnp.mod(pos % span - j, span)
+
+
+def _rand_int8(key, shape, lo=-8, hi=8):
+    return jax.random.randint(key, shape, lo, hi).astype(jnp.int8)
+
+
+def _qkv(h, g, span, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return (_rand_int8(key, (h, g, d)),
+            _rand_int8(jax.random.fold_in(key, 1), (h, span, d)),
+            _rand_int8(jax.random.fold_in(key, 2), (h, span, d)))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+RING_CASES = [
+    # (span, pos, window)  — slots beyond pos stay unwritten when pos+1<span
+    (32, 10, None),          # partially-written ring (negative positions)
+    (32, 70, None),          # wrapped several times
+    (32, 31, None),          # exactly full, no wrap
+    (24, 70, 7),             # window + causal on a wrapped ring
+    (24, 5, 24),             # window wider than written prefix
+]
+
+
+@pytest.mark.parametrize("span,pos,window", RING_CASES)
+@pytest.mark.parametrize("bk", [8, 64])
+def test_decode_matches_streamed_oracle(span, pos, window, bk):
+    """Any bk: bit-matches the slot-order streamed oracle (the live-block
+    map skips only fully-dead tiles, which is bit-exact)."""
+    q, k, v = _qkv(3, 4, span, 32, seed=span + pos)
+    kp = _ring(span, pos)
+    out = int_decode_attention(q, k, v, 0.02, 0.01, kp, pos, window=window,
+                               bk=bk)
+    want = ref.int_decode_attention_ref(q, k, v, 0.02, 0.01, kp, pos,
+                                        window=window, bk=bk)
+    _rel_close(out, want)
+
+
+@pytest.mark.parametrize("span,pos,window", RING_CASES)
+def test_decode_single_block_matches_fullrow(span, pos, window):
+    """bk >= span: the running grid IS the full-row grid (the XLA path)."""
+    q, k, v = _qkv(2, 3, span, 16, seed=pos)
+    kp = _ring(span, pos)
+    out = int_decode_attention(q, k, v, 0.02, 0.01, kp, pos, window=window,
+                               bk=-(-span // 128) * 128)
+    want = ref.int_decode_attention_ref(q, k, v, 0.02, 0.01, kp, pos,
+                                        window=window)
+    _rel_close(out, want)
+
+
+def test_decode_int4_packed_in_place():
+    """Nibble-packed ring == unpacked int8 ring, codes never leave uint8."""
+    span, pos = 32, 70
+    q, k, v = _qkv(2, 4, span, 32, seed=4)
+    k, v = jnp.clip(k, -8, 7), jnp.clip(v, -8, 7)
+    kp = _ring(span, pos)
+    packed = int_decode_attention(q, pack_int4(k), pack_int4(v), 0.02, 0.01,
+                                  kp, pos, bk=32, packed=True)
+    plain = int_decode_attention(q, k, v, 0.02, 0.01, kp, pos, bk=32)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(plain))
+
+
+@pytest.mark.parametrize("attn_bits", [2, 7, 8])
+def test_decode_prob_bits(attn_bits):
+    """8-bit biased codes included: exact vs the oracle on every grid."""
+    span, pos = 24, 40
+    q, k, v = _qkv(2, 2, span, 16, seed=attn_bits)
+    kp = _ring(span, pos)
+    out = int_decode_attention(q, k, v, 0.03, 0.01, kp, pos,
+                               attn_bits=attn_bits, bk=8)
+    want = ref.int_decode_attention_ref(q, k, v, 0.03, 0.01, kp, pos,
+                                        attn_bits=attn_bits, bk=8)
+    _rel_close(out, want)
+
+
+def test_decode_rejects_9bit_probs():
+    q = jnp.zeros((1, 1, 16), jnp.int8)
+    k = jnp.zeros((1, 8, 16), jnp.int8)
+    with pytest.raises(AssertionError):
+        int_decode_attention(q, k, k, 1.0, 1.0, jnp.arange(8), 7,
+                             attn_bits=9)
+
+
+# ---------------------------------------------------------------------------
+# dispatch: attention(..., k_positions=...) routes decode onto the kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hq,hkv,kv_bits,window,pos", [
+    (4, 4, 8, None, 9),        # MHA, partially-written ring
+    (8, 2, 8, None, 50),       # GQA g=4, wrapped
+    (6, 3, 4, None, 50),       # GQA + int4-packed cache
+    (4, 2, 8, 6, 50),          # window + causal + wrap
+])
+def test_dispatch_decode_parity_vs_xla(hq, hkv, kv_bits, window, pos):
+    span, d, b = 16, 16, 2
+    key = jax.random.PRNGKey(hq + pos)
+    q = jax.random.normal(key, (b, hq, 1, d))
+    kc = _rand_int8(jax.random.fold_in(key, 1), (b, hkv, span, d))
+    vc = _rand_int8(jax.random.fold_in(key, 2), (b, hkv, span, d))
+    kp = _ring(span, pos)
+    mask_unwritten = (kp < 0)[None, None, :, None]
+    kc = jnp.where(mask_unwritten, 0, kc)
+    vc = jnp.where(mask_unwritten, 0, vc)
+    if kv_bits == 4:
+        kc, vc = jnp.clip(kc, -8, 7), jnp.clip(vc, -8, 7)
+        kt = QTensor(pack_int4(kc), jnp.float32(0.11), 4)
+        vt = QTensor(pack_int4(vc), jnp.float32(0.07), 4)
+    else:
+        kt = QTensor(kc, jnp.float32(0.11), 8)
+        vt = QTensor(vc, jnp.float32(0.07), 8)
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=kv_bits,
+                      mode="int")
+    spec = AttnSpec(causal=True, window=window)
+    a_xla = attention(q, kt, vt, spec, cfg, q_offset=pos, k_positions=kp)
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas"):
+        a_pal = attention(q, kt, vt, spec, cfg, q_offset=pos,
+                          k_positions=kp)
+    assert dispatch.STATS["attention_decode_pallas"] == 1
+    assert dispatch.STATS["attention_pallas"] == 0
+    assert a_pal.shape == a_xla.shape == (b, hq, 1, d)
+    _rel_close(a_pal, a_xla)
+
+
+def test_decode_supported_policy():
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    spec = AttnSpec()
+    q1 = jnp.zeros((1, 4, 1, 8))
+    k = jnp.zeros((1, 2, 16, 8))
+    kp = jnp.arange(16)
+    ok = dispatch.decode_supported
+    assert ok(q1, k, spec, cfg, kp)
+    assert not ok(q1, k, spec, cfg, None)                    # no ring map
+    assert not ok(jnp.zeros((1, 4, 2, 8)), k, spec, cfg, kp)  # Sq > 1
+    assert not ok(q1, k, spec, cfg, kp.reshape(1, 16))       # per-batch map
+    assert not ok(q1, k, spec, cfg.replace(attn_bits=9), kp)
+    assert not ok(q1, k, spec, cfg.replace(softmax="exact"), kp)
+    assert ok(q1, k, spec, cfg.replace(attn_bits=8), kp)     # 8-bit probs
+
+
+# ---------------------------------------------------------------------------
+# model level: decode_step serves from the Pallas ring kernel
+# ---------------------------------------------------------------------------
+
+def _lm_setup(kv_bits=8, pattern=("attn",), window=None, n_layers=2):
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=kv_bits,
+                     mode="int")
+    cfg = lm.LMConfig(name="t", n_layers=n_layers, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc,
+                      block_pattern=pattern, attn_window=window)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+@pytest.mark.parametrize("kv_bits,pattern,window,steps", [
+    (8, ("attn",), None, 6),      # full ring, partially written
+    (4, ("attn",), None, 6),      # packed ring served in place
+    (8, ("local",), 6, 16),       # windowed ring, wraps several times
+])
+def test_lm_decode_step_dispatches_and_tracks_xla(kv_bits, pattern, window,
+                                                  steps):
+    cfg, params, toks = _lm_setup(kv_bits, pattern, window)
+    lx, cx = lm.prefill(params, {"tokens": toks}, cfg, max_len=24)
+    lp, cp = lm.prefill(params, {"tokens": toks}, cfg, max_len=24)
+    tok = jnp.argmax(lx, -1).astype(jnp.int32)
+    dispatch.reset_stats()
+    for _ in range(steps):
+        lx, cx = lm.decode_step(params, tok, cx, cfg)
+        with dispatch.use_backend("pallas"):
+            lp, cp = lm.decode_step(params, tok, cp, cfg)
+        _rel_close(lp, lx, tol=2e-5)
+        tok = jnp.argmax(lx, -1).astype(jnp.int32)
+    assert dispatch.STATS["attention_decode_pallas"] >= steps
+    # both caches advanced identically
+    assert int(cx["pos"]) == int(cp["pos"]) == 10 + steps
+
+
+def test_lm_decode_wraps_ring_past_span():
+    """Generate far beyond the ring span under pallas: wrap-around slots
+    keep matching the XLA ring semantics step for step."""
+    cfg, params, toks = _lm_setup(pattern=("local",), window=4)
+    _, cx = lm.prefill(params, {"tokens": toks}, cfg, max_len=64)
+    _, cp = lm.prefill(params, {"tokens": toks}, cfg, max_len=64)
+    span = cx["units"]["b0"]["k"].shape[3]
+    assert span < 24                               # truly a ring
+    tok = toks[:, -1:]
+    for _ in range(span + 4):                      # prefill wrote 10: wraps
+        lx, cx = lm.decode_step(params, tok, cx, cfg)
+        with dispatch.use_backend("pallas"):
+            lp, cp = lm.decode_step(params, tok, cp, cfg)
+        _rel_close(lp, lx, tol=2e-5)
+        tok = jnp.argmax(lx, -1).astype(jnp.int32)

@@ -146,7 +146,7 @@ def test_fused_gqa_folding_sq_mod():
                                np.asarray(want) / scale, atol=1e-5)
 
 
-@pytest.mark.parametrize("attn_bits", [2, 3, 7])
+@pytest.mark.parametrize("attn_bits", [2, 3, 7, 8])
 def test_int_attention_prob_bits(attn_bits):
     key = jax.random.PRNGKey(0)
     q = _rand_int8(key, (1, 64, 32))
@@ -161,11 +161,13 @@ def test_int_attention_prob_bits(attn_bits):
                                    np.asarray(want) / scale, atol=1e-5)
 
 
-def test_int_attention_rejects_8bit_probs():
+def test_int_attention_rejects_9bit_probs():
+    """8-bit codes ride int8 biased by -128 (exact un-bias in the PV
+    epilogue); anything wider has no integer carrier and must assert."""
     q = jnp.zeros((1, 32, 32), jnp.int8)
     for kern in (int_attention, int_attention_fused):
         with pytest.raises(AssertionError):
-            kern(q, q, q, 1.0, 1.0, attn_bits=8)
+            kern(q, q, q, 1.0, 1.0, attn_bits=9)
 
 
 def test_single_pass_fewer_macs():
