@@ -7,12 +7,16 @@ that matters for the TPU target).
 
 ``--json [PATH]`` additionally writes ``BENCH_kernels.json`` (default name)
 with per-kernel timings, the attention kernel-design comparison (two-pass
-vs single-pass analytic MXU MACs / HBM bytes), and the DECODE section: a
+vs single-pass analytic MXU MACs / HBM bytes), the DECODE section: a
 real prefill+decode loop timed under both kernel backends (tok/s plus the
 dispatch STATS proving the Pallas decode kernel actually served it) and
 the analytic per-step bytes-read / MAC comparison of the in-place
-ring-cache decode kernel vs the XLA fallback.  ``--quick`` restricts to
-the smallest shapes (CI-sized run).
+ring-cache decode kernel vs the XLA fallback — and the PAGED section:
+a timed multi-tenant continuous-batching loop through
+``launch.engine.PagedEngine`` under both backends, plus the analytic
+per-step KV bytes of the per-sequence paged kernel vs the contiguous
+ring (which always streams the batch-max live span for every row).
+``--quick`` restricts to the smallest shapes (CI-sized run).
 """
 from __future__ import annotations
 
@@ -110,6 +114,81 @@ def decode_step_analytic(h, g, span, live, d, kv_bits, *, bk=None):
     }
 
 
+def paged_step_analytic(h, g, page_size, pos_list, d, kv_bits):
+    """Per-decode-step K/V HBM bytes: paged kernel vs contiguous ring.
+
+    The paged kernel DMAs ``ceil((pos_b + 1) / page_size)`` pages for row b
+    — proportional to THAT sequence's live keys.  A contiguous per-batch
+    ring (PR 2) must size every row's span to the batch max sequence, so a
+    ragged batch pays ``max_len`` per row; the XLA paged fallback gathers
+    the same live pages (equal bytes) but materializes an unpacked copy
+    for int4.  MACs scale identically (2 int8 contractions per live key).
+    """
+    unit = kv_bits / 8
+    live_pages = [p // page_size + 1 for p in pos_list]
+    paged_bytes = sum(2 * h * n * page_size * d * unit for n in live_pages)
+    ring_span = max(p + 1 for p in pos_list)
+    ring_bytes = len(pos_list) * 2 * h * ring_span * d * unit
+    return {
+        "h": h, "g": g, "page_size": page_size, "pos": list(pos_list),
+        "d": d, "kv_bits": kv_bits,
+        "paged_bytes_per_step": int(paged_bytes),
+        "ring_bytes_per_step": int(ring_bytes),
+        "ring_over_paged": ring_bytes / max(paged_bytes, 1),
+        "paged_macs_per_step": sum(
+            attention_macs(h, g, n * page_size, d, design="decode")
+            for n in live_pages),
+        "ring_macs_per_step": len(pos_list) * attention_macs(
+            h, g, ring_span, d, design="decode"),
+    }
+
+
+def paged_loop(quick=False):
+    """Timed multi-tenant continuous-batching loop under both backends.
+
+    Staggered prompts through ``launch.engine.PagedEngine`` (admits/evicts
+    mid-run); CPU wall-clocks again matter only relatively — the dispatch
+    STATS prove the Pallas paged kernel served the decode, the analytic
+    bytes above carry the v5e story.
+    """
+    import numpy as np
+
+    from repro.core.api import QuantConfig, integerize_params
+    from repro.kernels import dispatch
+    from repro.launch.engine import PagedEngine, Request
+    from repro.models import lm
+
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    cfg = lm.LMConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
+                      kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    rng = np.random.RandomState(0)
+    lens = [5, 11] if quick else [5, 11, 17, 8]
+    gen = 2 if quick else 4
+    res = {}
+    for backend in ("xla", "pallas"):
+        with dispatch.use_backend(backend):
+            dispatch.reset_stats()
+            reqs = [Request(rid=i,
+                            prompt=rng.randint(0, cfg.vocab,
+                                               n).astype(np.int32),
+                            max_new_tokens=gen)
+                    for i, n in enumerate(lens)]
+            eng = PagedEngine(cfg, params, batch_size=2, max_len=32,
+                              page_size=8, prefill_buckets=(32,))
+            t0 = time.perf_counter()
+            eng.run(reqs)
+            dt = time.perf_counter() - t0
+            res[backend] = {
+                "requests": len(reqs), "engine_steps": eng.step_count,
+                "tok_per_s": sum(len(r.tokens) for r in reqs) / dt,
+                "per_seq_tok_per_s": [round(r.tok_per_s, 2) for r in reqs],
+                "stats": dict(dispatch.STATS)}
+    return res
+
+
 def decode_loop(quick=False):
     """Timed prefill + decode loop on a smoke LM under both backends.
 
@@ -200,7 +279,17 @@ def run(quick=False):
         ],
         "loop": decode_loop(quick=quick),
     }
-    return rows, design, decode
+
+    # Paged multi-tenant decode: per-sequence pages vs the batch-max ring.
+    paged = {
+        "analytic": [
+            paged_step_analytic(8, 4, 128, [127, 1023, 8191], 128, 8),
+            paged_step_analytic(8, 4, 128, [127, 1023, 8191], 128, 4),
+            paged_step_analytic(8, 4, 256, [255, 255, 255, 16383], 128, 8),
+        ],
+        "loop": paged_loop(quick=quick),
+    }
+    return rows, design, decode, paged
 
 
 def main(argv=None):
@@ -212,7 +301,7 @@ def main(argv=None):
                     help="smallest shapes only (CI-sized)")
     args = ap.parse_args(argv)
 
-    rows, design, decode = run(quick=args.quick)
+    rows, design, decode, paged = run(quick=args.quick)
     for r in rows:
         derived = " ".join(f"{k}={v:.1f}" for k, v in r.items()
                            if k not in ("name", "wall_us", "macs")
@@ -233,15 +322,27 @@ def main(argv=None):
         print(f"decode_loop[{backend}],{r['tok_per_s']:.2f} tok/s,"
               f"decode_pallas={st['attention_decode_pallas']},"
               f"attention_xla={st['attention_xla']}")
+    for a in paged["analytic"]:
+        print(f"paged_step,ps={a['page_size']},pos={a['pos']},"
+              f"kv_bits={a['kv_bits']},"
+              f"paged_bytes={a['paged_bytes_per_step']},"
+              f"ring_bytes={a['ring_bytes_per_step']},"
+              f"ring_over_paged={a['ring_over_paged']:.2f}x")
+    for backend, r in paged["loop"].items():
+        st = r["stats"]
+        print(f"paged_loop[{backend}],{r['tok_per_s']:.2f} tok/s,"
+              f"steps={r['engine_steps']},"
+              f"paged_pallas={st['attention_paged_pallas']},"
+              f"paged_xla={st['attention_paged_xla']}")
 
     if args.json:
         payload = {"kernels": rows, "attention_design": design,
-                   "decode": decode,
+                   "decode": decode, "paged": paged,
                    "device": jax.devices()[0].platform}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
-    return rows, design, decode
+    return rows, design, decode, paged
 
 
 if __name__ == "__main__":

@@ -90,7 +90,14 @@ def dense(x: jax.Array, p: dict, cfg: Optional[QuantConfig], *,
         y = maybe_qlinear(x, p, cfg)       # Pallas backend; None -> XLA
         if y is not None:
             return y
-        xq = quant.quantize_tensor(x, cfg.a_bits)
+        if x.ndim == 3 and x.shape[1] == 1:
+            # Single-token decode batch: calibrate per sequence (finest
+            # grid AND multi-tenant isolation — one hot row must not
+            # coarsen another sequence's activation codes).
+            dx = quant.absmax_scale(x, cfg.a_bits, axis=(1, 2))
+            xq = quant.quantize_tensor(x, cfg.a_bits, scale=dx)
+        else:
+            xq = quant.quantize_tensor(x, cfg.a_bits)
         # Keep the epilogue in f32 but hand activations back in the compute
         # dtype: the TP all-reduce after row-parallel layers otherwise moves
         # f32 (2x bytes) — measured 160 GB/step on qwen prefill_32k.

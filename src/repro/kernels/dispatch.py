@@ -31,6 +31,14 @@ Attention routes onto TWO kernels:
   ring cache *in place* — no dequantized or unpacked copy, and only ring
   blocks holding live keys are DMA'd per step.
 
+Paged decode (continuous batching) routes through
+:func:`maybe_paged_attention` onto
+:func:`~repro.kernels.int_attention.int_paged_decode_attention`: shared
+page pools + per-sequence page tables/positions/scales, with per-step DMA
+bounded by each sequence's own live pages (``attention_paged_pallas``
+STATS).  The XLA fallback (``attention_paged_xla``) gathers pages as
+*codes* — int8, or nibbles unpacked to int8 — never as floats.
+
 ``REPRO_PALLAS_COMPILED=1`` runs the kernels compiled on a real TPU;
 otherwise they execute in interpret mode (correct everywhere, fast
 nowhere — which is why "xla" stays the default off-TPU).
@@ -59,7 +67,8 @@ import jax.numpy as jnp
 from repro.core import quant
 from repro.core.softmax2 import LOG2E
 from repro.kernels.int_attention import (MAX_PROB_BITS, int_attention_fused,
-                                         int_decode_attention)
+                                         int_decode_attention,
+                                         int_paged_decode_attention)
 from repro.kernels.qmatmul import qmatmul
 
 _VALID = ("xla", "pallas")
@@ -77,6 +86,7 @@ _backend = [_checked(os.environ.get("REPRO_KERNEL_BACKEND", "xla"),
 
 STATS = {"qlinear_pallas": 0, "qlinear_xla": 0,
          "attention_pallas": 0, "attention_decode_pallas": 0,
+         "attention_paged_pallas": 0, "attention_paged_xla": 0,
          "attention_xla": 0}
 
 
@@ -210,6 +220,21 @@ def decode_blocks(span: int, d: int, *, budget: int = VMEM_BUDGET) -> int:
     return bk
 
 
+def paged_decode_blocks(page_size: int, d: int, *,
+                        budget: int = VMEM_BUDGET) -> int:
+    """Key-block size for the paged decode kernel: page-granularity blocks.
+
+    Pages are the DMA unit — physically scattered, so a kernel block can
+    never span two of them; the block size IS the page size.  Tile VMEM ~
+    2*page_size*d int8 K/V + ~17*8*d f32 q/out/carry.  Returns 0 when one
+    page per block cannot fit the budget (dispatch veto -> XLA fallback);
+    any realistic page size (<= 4096 keys at d <= 256) fits easily.
+    """
+    if 2 * page_size * d + 17 * 8 * d > budget:
+        return 0
+    return page_size
+
+
 # ---------------------------------------------------------------------------
 # Linear: ND activation x integerized weight -> Pallas qmatmul
 # ---------------------------------------------------------------------------
@@ -231,24 +256,35 @@ def maybe_qlinear(x, p: dict, cfg):
 
     Flattens leading dims to 2D, quantizes the activation per-tensor (same
     grid as the XLA path), keeps nibble-packed weights packed in HBM, and
-    folds ``dx_bar * dw`` plus bias into the kernel epilogue.
+    folds ``dx_bar * dw`` plus bias into the kernel epilogue.  Single-token
+    decode batches ((B, 1, K) activations) quantize per sequence instead —
+    the kernel's per-row epilogue scale — so continuous-batching tenants
+    never share an activation grid (matches the XLA path in core.api).
     """
     if resolve_backend(cfg) != "pallas" or not qlinear_supported(x, p):
         STATS["qlinear_xla"] += 1
         return None
     STATS["qlinear_pallas"] += 1
-    xq = quant.quantize_tensor(x, cfg.a_bits)
     w_q = p["w_q"]
     packed = w_q.dtype == jnp.uint8
     kdim = x.shape[-1]
     n = w_q.shape[0]
-    x2 = xq.q.reshape(-1, kdim)
-    scale = (p["w_scale"] * xq.scale).astype(jnp.float32)
+    per_row = x.ndim == 3 and x.shape[1] == 1
+    if per_row:
+        codes, row_scale = quantize_rows(x, cfg.a_bits)
+        x2 = codes.reshape(-1, kdim)
+        scale = p["w_scale"].astype(jnp.float32)
+        row_scale = row_scale.astype(jnp.float32)
+    else:
+        xq = quant.quantize_tensor(x, cfg.a_bits)
+        x2 = xq.q.reshape(-1, kdim)
+        scale = (p["w_scale"] * xq.scale).astype(jnp.float32)
+        row_scale = None
     bias = p.get("b")
     bm, bn, bk = qmatmul_blocks(x2.shape[0], n, kdim)
     out = qmatmul(x2, w_q, scale,
                   None if bias is None else bias.astype(jnp.float32),
-                  bm=bm, bn=bn, bk=bk, packed=packed,
+                  row_scale, bm=bm, bn=bn, bk=bk, packed=packed,
                   interpret=interpret_default())
     return out.reshape(*x.shape[:-1], n).astype(x.dtype)
 
@@ -393,3 +429,89 @@ def _decode_call(q, k, v, spec, cfg, q_offset, k_positions):
                                bk=bk, packed=packed,
                                interpret=interpret_default())
     return out.reshape(b, hq, 1, d).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged attention: shared page pools + per-sequence page tables
+# ---------------------------------------------------------------------------
+
+def quantize_rows(x, bits):
+    """Per-sequence (leading-axis) activation quantization.
+
+    Returns (codes int8, scale (B,)).  Decode queries must be quantized per
+    sequence — a per-tensor scale over the batch would let one tenant's hot
+    activations coarsen every other tenant's grid (and break solo-vs-batch
+    parity).
+    """
+    scale = quant.absmax_scale(x, bits, axis=tuple(range(1, x.ndim)))
+    return quant.quantize(x, scale, bits), scale.reshape(x.shape[0])
+
+
+def paged_query_grid(q, spec, cfg, k_scale):
+    """Per-sequence query codes + folded per-row softmax scale.
+
+    The ONE place the paged decode grid is derived: both the Pallas call
+    below and the XLA gather fallback in ``layers.attention`` consume this,
+    so the emitted prob codes are bit-identical across backends by
+    construction.
+    """
+    qq, qscale = quantize_rows(q, cfg.a_bits)
+    scale = spec.softmax_scale or (1.0 / q.shape[-1] ** 0.5)
+    sc = scale * LOG2E * qscale.astype(jnp.float32) * \
+        jnp.asarray(k_scale, jnp.float32).reshape(-1)
+    return qq, sc
+
+
+def paged_decode_supported(q, k_pages, spec, cfg, page_table, pos) -> bool:
+    """Shape policy for the paged decode kernel.
+
+    Sq must be 1 (GQA groups become query rows), pools/page table must be
+    the ``models.lm`` paged-cache layout, and one page per block must fit
+    the VMEM budget (:func:`paged_decode_blocks`).
+    """
+    if cfg.attn_bits > MAX_PROB_BITS:
+        return False
+    if getattr(cfg, "softmax", "base2") != "base2":
+        return False
+    if getattr(k_pages, "ndim", None) != 4 or page_table.ndim != 2:
+        return False
+    b, hq, sq, d = q.shape
+    num_phys, hkv, page_size, dk = k_pages.shape
+    if sq != 1 or d == 0 or hq % hkv:
+        return False
+    if k_pages.dtype == jnp.uint8 and (dk * 2 != d or d % 2):
+        return False                      # nibble-packed pools need even D
+    if k_pages.dtype != jnp.uint8 and dk != d:
+        return False
+    return paged_decode_blocks(page_size, d) > 0
+
+
+def maybe_paged_attention(q, k_pages, v_pages, k_scale, v_scale, spec, cfg,
+                          *, page_table, pos):
+    """Pallas-backed paged decode; ``None`` -> caller's XLA gather path."""
+    if resolve_backend(cfg) == "pallas" and \
+            paged_decode_supported(q, k_pages, spec, cfg, page_table, pos):
+        STATS["attention_paged_pallas"] += 1
+        return _paged_call(q, k_pages, v_pages, k_scale, v_scale, spec, cfg,
+                           page_table, pos)
+    STATS["attention_paged_xla"] += 1
+    return None
+
+
+def _paged_call(q, k_pages, v_pages, k_scale, v_scale, spec, cfg,
+                page_table, pos):
+    """One continuous-batching decode step on the paged kernel.
+
+    The page pools go to the kernel exactly as stored (int8 codes or int4
+    nibbles) and each sequence's scales stay its own: the per-row softmax
+    scale folds ``dq[b] * dk[b]`` so no tenant's grid leaks into another's.
+    """
+    b, hq, _, d = q.shape
+    hkv = k_pages.shape[1]
+    g = hq // hkv
+    qq, sc = paged_query_grid(q, spec, cfg, k_scale)
+    out = int_paged_decode_attention(
+        qq.reshape(b, hkv, g, d), k_pages, v_pages, sc, v_scale,
+        page_table, pos, attn_bits=cfg.attn_bits, window=spec.window,
+        packed=k_pages.dtype == jnp.uint8, interpret=interpret_default())
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

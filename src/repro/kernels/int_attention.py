@@ -37,6 +37,16 @@ Three kernels share that quantizer:
   the index map sees it before the body runs) DMAs only ring blocks that
   hold a key inside the causal/window span of the current position.  GQA
   query groups ride along as the G query rows of a single MXU tile.
+- :func:`int_paged_decode_attention` — the ring kernel generalized to a
+  PAGED KV cache for continuous batching: keys/values live in shared
+  ``(num_pages, Hkv, page_size, D[/2])`` page pools and each sequence owns
+  a ``(max_pages,)`` page-table row plus its own position.  The runtime
+  block map becomes per-sequence (:func:`_paged_meta`): grid step ``t`` of
+  row ``b`` DMAs physical page ``page_table[b, lo_b + t]``, so a decode
+  step reads exactly the pages holding that sequence's live keys — never
+  the batch-max span, never another tenant's pages.  Key positions need no
+  stored map: logical page ``l`` holds positions ``l*page_size + r``.
+  Scales are per-sequence ``(B,)`` vectors (multi-tenant isolation).
 
 Skipping a fully-masked key block is bit-exact: it contributes ``e = 0``
 to every carry and cannot raise the running ``m`` — which is why both block
@@ -185,6 +195,34 @@ def _decode_meta(k_positions, pos, nk, bk, causal, window):
         [jnp.stack([pos, n_live]).astype(jnp.int32), kmap])
 
 
+def _paged_meta(page_table, pos, num_phys, page_size, window):
+    """RUNTIME per-sequence page map for the paged decode kernel.
+
+    Row ``b`` is ``[pos_b, n_live, physical page ids (P entries), logical
+    page ids (P entries)]``.  Live logical pages are the window-clipped
+    span ``[lo_b, pos_b // page_size]`` (logical page ``l`` holds positions
+    ``l*page_size .. l*page_size + page_size - 1``); dead grid steps repeat
+    the last live entry so Pallas issues no DMA for them.  ``pos_b < 0``
+    marks an inactive row: zero live pages, every step dead.  An
+    UNALLOCATED entry (< 0) inside the live span DMAs physical page 0 but
+    its logical id is emitted as -1, which fails the body's ``kp >= 0``
+    mask — the hole contributes e = 0 (bit-exact skip), matching the
+    oracle's ``kpos = -1`` for unallocated slots.
+    """
+    b, p = page_table.shape
+    hi = pos // page_size
+    lo = jnp.zeros_like(pos) if window is None \
+        else jnp.maximum((pos - window + 1) // page_size, 0)
+    n_live = jnp.where(pos >= 0, jnp.clip(hi - lo + 1, 0, p), 0)
+    logical = jnp.clip(jnp.minimum(lo[:, None] + jnp.arange(p)[None, :],
+                                   hi[:, None]), 0, p - 1)
+    raw = jnp.take_along_axis(page_table, logical, axis=1)
+    phys = jnp.clip(raw, 0, num_phys - 1)
+    logical = jnp.where(raw >= 0, logical, -1)
+    return jnp.concatenate([pos[:, None], n_live[:, None], phys, logical],
+                           axis=1).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # Kernel bodies
 # ---------------------------------------------------------------------------
@@ -308,6 +346,48 @@ def _decode_kernel(meta_ref, q_ref, k_ref, v_ref, kp_ref, sc_ref, vs_ref,
     def _out():
         s = jnp.maximum(sb_ref[...], 1e-30)[:, None]
         o_ref[0] = acc_ref[...] * ((2.0 / qmax) / s * vs_ref[0, 0])
+
+
+def _paged_decode_kernel(meta_ref, q_ref, k_ref, v_ref, sc_ref, vs_ref,
+                         o_ref, mb_ref, sb_ref, acc_ref, *, nt, page_size,
+                         window, qmax, packed):
+    b, t = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        mb_ref[...] = jnp.full_like(mb_ref, NEG)
+        sb_ref[...] = jnp.zeros_like(sb_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = meta_ref[b, 0]
+    live = t < meta_ref[b, 1]
+    # Key positions are implied by the logical page id: no per-slot position
+    # map is stored (unlike the ring kernel) — page r of logical page l is
+    # absolute position l*page_size + r.
+    logical = meta_ref[b, 2 + nt + t]
+    kp = logical * page_size + \
+        jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    # kp >= 0 rejects unallocated pages inside the span (logical = -1).
+    valid = (kp >= 0) & (kp <= pos)
+    if window is not None:
+        valid &= kp > pos - window
+
+    @pl.when(live & jnp.any(valid))
+    def _compute():
+        k = _unpack_nibbles(k_ref[0, 0]) if packed else k_ref[0, 0]
+        v = _unpack_nibbles(v_ref[0, 0]) if packed else v_ref[0, 0]
+        acc = jnp.dot(q_ref[0, 0], k.T, preferred_element_type=jnp.int32)
+        x = acc.astype(jnp.float32) * sc_ref[0, 0]
+        x = jnp.maximum(jnp.where(valid, x, NEG), -120.0)
+        e, p_q, r = _online_update(x, mb_ref, qmax)
+        pv = _pv_dot(p_q, v, qmax)
+        sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
+        acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _out():
+        s = jnp.maximum(sb_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = acc_ref[...] * ((2.0 / qmax) / s * vs_ref[0, 0])
 
 
 # ---------------------------------------------------------------------------
@@ -514,6 +594,84 @@ def int_decode_attention(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
         interpret=interpret,
     )(meta, q_q, k_q, v_q, kp2, sc2, vs2)
     return out[:, :g]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "attn_bits", "window", "packed", "interpret"))
+def int_paged_decode_attention(q_q, k_pages, v_pages, sc, v_scale,
+                               page_table, pos, *, attn_bits=7, window=None,
+                               packed=False, interpret=True):
+    """Single-query integer decode attention over a PAGED KV cache, in place.
+
+    q_q: (B, Hkv, G, D) int8 — one decode step per sequence, the G GQA
+    query groups as MXU rows.  k_pages, v_pages: the shared page pools as
+    stored — (num_pages, Hkv, page_size, D) int8, or (..., D//2) uint8
+    nibbles with ``packed=True``.  ``page_table``: (B, max_pages) int32,
+    sequence b's logical page l lives in physical page ``page_table[b, l]``
+    (negative = unallocated).  ``pos``: (B,) int32 per-sequence query
+    positions (negative = inactive row -> zero output).  ``sc`` / ``v_scale``
+    are per-sequence (B,) vectors (or scalars, broadcast): multi-tenant
+    isolation means every sequence carries its own quantization grid.
+    Returns (B, Hkv, G, D) f32.
+
+    This is :func:`int_decode_attention` with the runtime live-block map
+    made per-sequence: grid step t of row b DMAs physical page
+    ``page_table[b, lo_b + t]`` (window-clipped span), so per-step HBM
+    traffic is proportional to THAT sequence's live pages — not the batch
+    max, and never another sequence's pages.  Pages stream in logical
+    (= position) order on the running-m grid, bit-matching the streamed
+    oracle in kernels/ref.py with ``bk = page_size``; dead pages (outside
+    the window, before lo, unwritten) are never DMA'd, which is bit-exact
+    because a fully-masked page contributes e = 0 and cannot raise the
+    running m.
+    """
+    assert attn_bits <= MAX_PROB_BITS, \
+        f"prob codes are <= {MAX_PROB_BITS}-bit (int8 carried, 8-bit biased)"
+    b, hkv, g, d = q_q.shape
+    num_phys, _, page_size, dk = k_pages.shape
+    if packed:
+        assert d % 2 == 0 and dk * 2 == d, (q_q.shape, k_pages.shape)
+    else:
+        assert dk == d, (q_q.shape, k_pages.shape)
+    qmax = float((1 << attn_bits) - 1)
+    nt = page_table.shape[1]            # grid steps = max logical pages
+    pg = (-g) % 8                       # f32 sublane alignment for scratch
+    if pg:
+        q_q = jnp.pad(q_q, ((0, 0), (0, 0), (0, pg), (0, 0)))
+    gq = g + pg
+    pos = jnp.asarray(pos, jnp.int32).reshape(b)
+    meta = _paged_meta(jnp.asarray(page_table, jnp.int32), pos, num_phys,
+                       page_size, window)
+    sc2 = jnp.broadcast_to(jnp.asarray(sc, jnp.float32).reshape(-1, 1),
+                           (b, 1))
+    vs2 = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32).reshape(-1, 1),
+                           (b, 1))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, gq, d), lambda b, h, t, m: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dk),
+                         lambda b, h, t, m: (m[b, 2 + t], h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dk),
+                         lambda b, h, t, m: (m[b, 2 + t], h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, t, m: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, t, m: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gq, d), lambda b, h, t, m: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((gq,), jnp.float32),
+                        pltpu.VMEM((gq,), jnp.float32),
+                        pltpu.VMEM((gq, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, nt=nt, page_size=page_size,
+                          window=window, qmax=qmax, packed=packed),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gq, d), jnp.float32),
+        interpret=interpret,
+    )(meta, q_q, k_pages, v_pages, sc2, vs2)
+    return out[:, :, :g]
 
 
 def attention_macs(h, sq, sk, d, *, design="single"):

@@ -27,8 +27,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _qmatmul_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
-                    nk: int, out_dtype):
+def _qmatmul_kernel(x_ref, w_ref, scale_ref, bias_ref, rs_ref, o_ref,
+                    acc_ref, *, nk: int, out_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -41,7 +41,8 @@ def _qmatmul_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
     @pl.when(k == nk - 1)
     def _epilogue():
         acc = acc_ref[...].astype(jnp.float32)
-        out = acc * scale_ref[0, :][None, :] + bias_ref[0, :][None, :]
+        out = acc * (scale_ref[0, :][None, :] * rs_ref[:, 0][:, None]) \
+            + bias_ref[0, :][None, :]
         o_ref[...] = out.astype(out_dtype)
 
 
@@ -55,8 +56,8 @@ def _unpack_nibbles(packed):
     return out.reshape(packed.shape[0], packed.shape[1] * 2)
 
 
-def _qmatmul_packed_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref,
-                           *, nk: int, out_dtype):
+def _qmatmul_packed_kernel(x_ref, w_ref, scale_ref, bias_ref, rs_ref, o_ref,
+                           acc_ref, *, nk: int, out_dtype):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -69,18 +70,22 @@ def _qmatmul_packed_kernel(x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref,
     @pl.when(k == nk - 1)
     def _epilogue():
         acc = acc_ref[...].astype(jnp.float32)
-        out = acc * scale_ref[0, :][None, :] + bias_ref[0, :][None, :]
+        out = acc * (scale_ref[0, :][None, :] * rs_ref[:, 0][:, None]) \
+            + bias_ref[0, :][None, :]
         o_ref[...] = out.astype(out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
                                              "interpret", "packed"))
-def qmatmul(x_q, w_q, scale, bias=None, *, bm=128, bn=128, bk=512,
-            out_dtype=jnp.float32, interpret=True, packed=False):
+def qmatmul(x_q, w_q, scale, bias=None, row_scale=None, *, bm=128, bn=128,
+            bk=512, out_dtype=jnp.float32, interpret=True, packed=False):
     """x_q (M, K) int8 @ w_q (N, K) int8 -> (M, N) float, fused epilogue.
 
     ``scale`` (N,) f32 folds the per-tensor input step and per-channel weight
-    step (dx_bar * dw).  ``packed=True`` takes w_q as (N, K//2) uint8 nibbles.
+    step (dx_bar * dw).  ``row_scale`` (M,) optionally refines ``dx_bar`` to
+    a per-input-row step (decode batches quantize each sequence on its own
+    grid); the epilogue then applies ``scale[n] * row_scale[m]``.
+    ``packed=True`` takes w_q as (N, K//2) uint8 nibbles.
     """
     m, kdim = x_q.shape
     n = w_q.shape[0]
@@ -88,6 +93,8 @@ def qmatmul(x_q, w_q, scale, bias=None, *, bm=128, bn=128, bk=512,
     assert kdim == k_logical, (x_q.shape, w_q.shape, packed)
     if bias is None:
         bias = jnp.zeros((n,), jnp.float32)
+    if row_scale is None:
+        row_scale = jnp.ones((m,), jnp.float32)
 
     # Pad to block multiples (static shapes).
     pm, pn, pk = (-m) % bm, (-n) % bn, (-kdim) % bk
@@ -98,11 +105,14 @@ def qmatmul(x_q, w_q, scale, bias=None, *, bm=128, bn=128, bk=512,
     if pn:
         scale = jnp.pad(scale, (0, pn))
         bias = jnp.pad(bias, (0, pn))
+    if pm:
+        row_scale = jnp.pad(row_scale, (0, pm))
     mm, nn, kk = m + pm, n + pn, kdim + pk
     nm, nn_blocks, nk = mm // bm, nn // bn, kk // bk
 
     scale2 = scale.reshape(1, nn).astype(jnp.float32)
     bias2 = bias.reshape(1, nn).astype(jnp.float32)
+    rs2 = row_scale.reshape(mm, 1).astype(jnp.float32)
     kern = _qmatmul_packed_kernel if packed else _qmatmul_kernel
     wb = bk // 2 if packed else bk
 
@@ -114,10 +124,11 @@ def qmatmul(x_q, w_q, scale, bias=None, *, bm=128, bn=128, bk=512,
             pl.BlockSpec((bn, wb), lambda i, j, k: (j, k)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, scale2, bias2)
+    )(x_q, w_q, scale2, bias2, rs2)
     return out[:m, :n]

@@ -38,6 +38,12 @@ Two oracles are provided for attention:
   running grid, bit-matching ``kernels.int_decode_attention`` for any
   ``bk`` (the kernel's live-block skipping is bit-exact: a fully-masked
   block contributes e = 0 and cannot raise the running ``m``).
+- :func:`int_paged_decode_attention_ref` — the PAGED decode oracle: each
+  batch row gathers its own pages (via :func:`gather_pages`) into a
+  position-contiguous key row and runs the ring oracle with per-sequence
+  position and scales.  ``bk=None`` is the full-gather grid (the XLA
+  serving fallback); ``bk = page_size`` streams pages in logical order,
+  bit-matching ``kernels.int_paged_decode_attention``.
 """
 from __future__ import annotations
 
@@ -195,6 +201,59 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
             jnp.zeros((h, g, d)))
     (_, s, pv), _ = jax.lax.scan(block, init, jnp.arange(nk))
     return pv * ((2.0 / qmax) / jnp.maximum(s, 1e-30) * v_scale)
+
+
+def gather_pages(pages, page_table):
+    """Gather one row per sequence from a paged pool, in position order.
+
+    pages: (num_pages, H, page_size, d) as stored (int8 codes, uint8
+    nibbles, or floats — the dtype passes through untouched);
+    page_table: (B, max_pages) int32, negative = unallocated (clamped —
+    callers mask those slots via positions).  Returns
+    (B, H, max_pages * page_size, d): logical position p of row b lands at
+    key index p, so ``k_positions`` for the gathered row is just arange.
+    """
+    num_phys = pages.shape[0]
+    g = pages[jnp.clip(page_table, 0, num_phys - 1)]   # (B, P, H, ps, d)
+    b, p, h, ps, d = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, h, p * ps, d)
+
+
+def int_paged_decode_attention_ref(q_q, k_pages, v_pages, sc, v_scale,
+                                   page_table, pos, *, attn_bits=7,
+                                   window=None, bk=None):
+    """Paged decode oracle: (B, Hkv, G, D) queries vs shared page pools.
+
+    Shapes/contract as ``kernels.int_paged_decode_attention``; uint8 pools
+    are treated as nibble-packed and unpacked to int8 codes (never float).
+    Each row's pages gather into a position-contiguous key row — slots of
+    unallocated pages are marked unwritten — then the ring oracle runs per
+    row with that row's ``pos``/``sc``/``v_scale``.  ``bk=None``: full-row
+    grid (the XLA fallback).  ``bk``: streamed grid; ``bk = page_size``
+    bit-matches the Pallas paged kernel (leading out-of-window pages are
+    fully masked, so streaming from logical page 0 is exact).
+    """
+    b = q_q.shape[0]
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    if k.dtype == jnp.uint8:                 # nibble-packed pools
+        from repro.core.quant import unpack_int4
+        k, v = unpack_int4(k), unpack_int4(v)
+    ps = k_pages.shape[2]
+    total = page_table.shape[1] * ps
+    alloc = jnp.repeat(page_table >= 0, ps, axis=1)          # (B, total)
+    kpos = jnp.where(alloc, jnp.arange(total)[None, :], -1)
+    sc = jnp.broadcast_to(jnp.asarray(sc, jnp.float32).reshape(-1), (b,))
+    vs = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32).reshape(-1),
+                          (b,))
+    pos = jnp.asarray(pos, jnp.int32).reshape(b)
+
+    def one(qb, kb, vb, scb, vsb, kpb, pb):
+        return int_decode_attention_ref(qb, kb, vb, scb, vsb, kpb, pb,
+                                        attn_bits=attn_bits, causal=True,
+                                        window=window, bk=bk)
+
+    return jax.vmap(one)(q_q, k, v, sc, vs, kpos, pos)
 
 
 def pq_layernorm_ref(x, gamma, beta, delta, *, bits=8, eps=1e-6,

@@ -1,0 +1,294 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+Multi-tenant serving of the paper's integerized graph: requests with
+arbitrary prompt lengths are admitted into a fixed-shape decode batch as
+rows free up, decode one token per step on their own positions/pages/
+scales, and are evicted the moment they finish — their pages recycle to
+the next admission.  The decode step is jitted ONCE for one shape
+(``(batch_size, 1)`` tokens + the fixed-size paged cache) and never
+retraces, no matter how requests come and go.
+
+Page-table layout (see also :func:`repro.models.lm.init_paged_cache`)::
+
+    pools       (num_pages + 1, Hkv, page_size, hd[/2])   per attn layer
+                 int8 codes / uint8 int4 nibbles / floats; the extra last
+                 page is the TRASH page (masked writes land there, it is
+                 never read)
+    page_table  (batch_size, max_pages) int32, shared by all layers:
+                 row b, entry l = physical page of b's logical page l
+                 (tokens l*page_size .. (l+1)*page_size - 1); -1 = none
+    pos         (batch_size,) int32: next decode position per row;
+                 -1 = inactive row (frozen, attends nothing)
+    k/v scales  (batch_size,) per-sequence quantization steps per layer
+
+The engine owns the page allocator on the host: a free list of physical
+page ids plus host mirrors of ``pos``/``page_table``.  Device and host
+stay in sync without readbacks because the jitted step advances ``pos``
+deterministically (+1 per active row).
+
+Scheduling policy (deliberately simple, deterministic):
+
+- FIFO admission: a queued request is admitted when (a) a batch row is
+  free and (b) the free list holds its WORST-CASE page count,
+  ``ceil((prompt_len + max_new) / page_size)``.  All of those pages are
+  reserved (allocated into the page table) at admission, so a running
+  sequence can never starve mid-flight and admission never deadlocks.
+- Prefill-on-admit: the prompt runs through :func:`repro.models.lm.
+  paged_prefill` on a private batch=1 paged cache (prompt padded to a
+  fixed bucket so admission traces once per bucket), then every layer's
+  prompt pages are copied into the shared pools at the reserved physical
+  ids and the row's scales / recurrent states are installed.  Ragged
+  prompts therefore never pad the *decode* batch.
+- Per-sequence EOS: a row finishes on its own ``eos_id`` or
+  ``max_new_tokens``; it is evicted immediately (pos := -1, pages back on
+  the free list) and the next queued request can take the row that same
+  step.  Finished rows are never decoded.
+
+Follow-up (see ROADMAP): prefix-sharing / copy-on-write pages would let
+admissions with a common prompt prefix share physical pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request (prompt in, generated tokens out)."""
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    tokens: list = dataclasses.field(default_factory=list)
+    admitted_step: int = -1
+    finished_step: int = -1
+    decode_s: float = 0.0                 # wall time while this row decoded
+
+    @property
+    def done(self) -> bool:
+        return self.finished_step >= 0
+
+    @property
+    def tok_per_s(self) -> float:
+        return len(self.tokens) / max(self.decode_s, 1e-9)
+
+
+def _bucket(n: int, buckets) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"prompt length {n} exceeds largest bucket {buckets}")
+
+
+def _copy_admitted(big, small, phys_targets, row):
+    """Install one prefilled batch=1 cache into the shared cache at ``row``.
+
+    Walks the two cache trees together: page pools copy the admission's
+    logical pages to the reserved physical ids (``phys_targets`` is padded
+    with the big cache's trash-page id, so pad-only pages scribble the
+    trash page and real pages land where the page table points);
+    per-sequence leaves (scales, recurrent states) copy into ``row``.
+    ``units`` subtrees carry a leading layer-stack axis.
+    """
+    def walk(b, s, stacked):
+        out = {}
+        for key, bleaf in b.items():
+            sleaf = s[key]
+            if isinstance(bleaf, dict):
+                out[key] = walk(bleaf, sleaf, stacked or key == "units")
+            elif key in ("k_pages", "v_pages"):
+                n = sleaf.shape[1 if stacked else 0] - 1   # skip small trash
+                if stacked:
+                    out[key] = bleaf.at[:, phys_targets].set(sleaf[:, :n])
+                else:
+                    out[key] = bleaf.at[phys_targets].set(sleaf[:n])
+            else:                                   # (B,)-leading per-row
+                if stacked:
+                    out[key] = bleaf.at[:, row].set(sleaf[:, 0])
+                else:
+                    out[key] = bleaf.at[row].set(sleaf[0])
+        return out
+
+    big = dict(big)
+    keep = {k: big.pop(k) for k in ("pos", "page_table")}   # host-owned
+    small = {k: v for k, v in small.items()
+             if k not in ("pos", "page_table")}
+    out = walk(big, small, False)
+    out.update(keep)
+    return out
+
+
+class PagedEngine:
+    """Continuous-batching engine; see module docstring for the policy."""
+
+    def __init__(self, cfg: lm.LMConfig, params, *, batch_size: int = 4,
+                 max_len: int = 256, page_size: int = 16,
+                 num_pages: Optional[int] = None, prefill_buckets=(64,)):
+        self.cfg, self.params = cfg, params
+        self.batch_size, self.page_size = batch_size, page_size
+        self.max_pages = -(-max_len // page_size)
+        self.num_pages = num_pages if num_pages is not None \
+            else batch_size * self.max_pages
+        self.prefill_buckets = tuple(sorted(prefill_buckets))
+        self.cache = lm.init_paged_cache(cfg, batch_size, max_len,
+                                         page_size=page_size,
+                                         num_pages=self.num_pages)
+        # Host-side allocator state (authoritative; device copies pushed
+        # whenever admission/eviction dirties them).
+        self.free_pages = list(range(self.num_pages))
+        self.page_table = np.full((batch_size, self.max_pages), -1, np.int32)
+        self.pos = np.full((batch_size,), -1, np.int32)
+        self.row_req: list[Optional[Request]] = [None] * batch_size
+        self.row_pages: list[list[int]] = [[] for _ in range(batch_size)]
+        self.next_tok = np.zeros((batch_size,), np.int32)
+        self.queue: list[Request] = []
+        self.step_count = 0
+        self._dirty = True
+
+        def step_fn(params, tok, cache):
+            return lm.decode_step(params, tok, cache, cfg)
+
+        def prefill_fn(params, batch, cache):
+            return lm.paged_prefill(params, batch, cfg, cache)
+
+        self._step = jax.jit(step_fn)
+        self._prefill = jax.jit(prefill_fn)
+        self._admit_copy = jax.jit(_copy_admitted,
+                                   static_argnames=("row",))
+
+    # -- allocator ---------------------------------------------------------
+
+    def _pages_needed(self, req: Request) -> int:
+        return -(-(len(req.prompt) + req.max_new_tokens) // self.page_size)
+
+    def can_admit(self, req: Request) -> bool:
+        need = self._pages_needed(req)
+        # need <= max_pages: the request must also FIT one page-table row
+        # (prompt + generation bounded by max_len), not just the free pool.
+        return (None in self.row_req and need <= self.max_pages
+                and len(self.free_pages) >= need)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, req: Request, row: int):
+        plen = len(req.prompt)
+        bucket = _bucket(plen, self.prefill_buckets)
+        need = self._pages_needed(req)
+        pages = [self.free_pages.pop(0) for _ in range(need)]
+        self.row_pages[row] = pages
+        self.page_table[row] = -1
+        self.page_table[row, :need] = pages
+        self.pos[row] = plen
+        self._dirty = True
+
+        # Private batch=1 prefill cache with an identity page table over
+        # its own (small) pool; its pages copy into the reserved physical
+        # ids afterwards.
+        small = lm.init_paged_cache(self.cfg, 1, bucket,
+                                    page_size=self.page_size)
+        small_pages = small["page_table"].shape[1]
+        small["page_table"] = jnp.arange(small_pages,
+                                         dtype=jnp.int32)[None, :]
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        logits, small = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray([plen], jnp.int32)}, small)
+        # Targets for the small cache's pages: real prompt pages to their
+        # reserved ids, pad-only pages to the trash page.
+        n_prompt_pages = -(-plen // self.page_size)
+        targets = np.full((small_pages,), self.num_pages, np.int32)
+        targets[:n_prompt_pages] = pages[:n_prompt_pages]
+        self.cache = self._admit_copy(self.cache, small,
+                                      jnp.asarray(targets), row=row)
+        first = int(jnp.argmax(logits[0, -1]))
+        self.next_tok[row] = first
+        self.row_req[row] = req
+        req.admitted_step = self.step_count
+        req.tokens.append(first)
+        self._maybe_finish(row, first)
+
+    def _maybe_finish(self, row: int, tok: int):
+        req = self.row_req[row]
+        if req is None:
+            return
+        if ((req.eos_id is not None and tok == req.eos_id)
+                or len(req.tokens) >= req.max_new_tokens):
+            self._evict(row)
+
+    def _evict(self, row: int):
+        req = self.row_req[row]
+        req.finished_step = self.step_count
+        self.free_pages.extend(self.row_pages[row])
+        self.row_pages[row] = []
+        self.row_req[row] = None
+        self.page_table[row] = -1
+        self.pos[row] = -1
+        self._dirty = True
+
+    # -- serving loop ------------------------------------------------------
+
+    def _push_tables(self):
+        if self._dirty:
+            self.cache = dict(self.cache,
+                              pos=jnp.asarray(self.pos),
+                              page_table=jnp.asarray(self.page_table))
+            self._dirty = False
+
+    def step(self) -> bool:
+        """Admit what fits, decode one token for every active row.
+
+        Returns False when there is nothing left to do.
+        """
+        while self.queue and self.can_admit(self.queue[0]):
+            row = self.row_req.index(None)
+            self._admit(self.queue.pop(0), row)
+        active = [r for r, req in enumerate(self.row_req) if req is not None]
+        if not active:
+            if self.queue:
+                # Every row is free yet the head request still cannot be
+                # admitted: it can never run on this pool.
+                req = self.queue[0]
+                raise RuntimeError(
+                    f"request {req.rid} needs {self._pages_needed(req)} "
+                    f"pages but the pool has {self.num_pages} and a "
+                    f"sequence may hold at most {self.max_pages}")
+            return False
+        self._push_tables()
+        t0 = time.perf_counter()
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(self.next_tok)[:, None], self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        dt = time.perf_counter() - t0
+        self.pos[self.pos >= 0] += 1          # mirror the device update
+        self.step_count += 1
+        for row in active:
+            req = self.row_req[row]
+            req.decode_s += dt
+            req.tokens.append(int(nxt[row]))
+            self.next_tok[row] = nxt[row]
+            self._maybe_finish(row, int(nxt[row]))
+        return True
+
+    def run(self, requests=None) -> list[Request]:
+        """Serve ``requests`` (plus anything already queued) to completion."""
+        done: list[Request] = []
+        for r in requests or []:
+            self.submit(r)
+        track = list(self.queue) + [r for r in self.row_req if r is not None]
+        while self.step():
+            pass
+        done.extend(track)
+        return done

@@ -1,56 +1,81 @@
-"""Serving driver: integerized batched inference (prefill + decode loop).
+"""Serving driver: a thin CLI over the continuous-batching paged engine.
 
 The serving graph is the paper's contribution: weights stored as low-bit
-codes, integer matmuls with reordered dequantization, int8 KV cache (read
-in place by the Pallas decode kernel under ``--backend pallas``), base-2
-embedded softmax.  ``--mode float`` runs the Q-ViT-style dequantize-first
-baseline for comparison.
+codes, integer matmuls with reordered dequantization, low-bit paged KV
+cache (read in place by the Pallas paged decode kernel under
+``--backend pallas``), base-2 embedded softmax.  ``--mode float`` runs the
+Q-ViT-style dequantize-first baseline for comparison.
 
-The run always prints the kernel-dispatch STATS line: in CI it is the
-regression signal that the serving graph really traced onto the Pallas
-kernels (``attention_decode_pallas`` > 0 for the decode loop) instead of
-silently falling back to XLA.
+Requests with ragged prompt lengths flow through
+:class:`repro.launch.engine.PagedEngine`: admitted as batch rows free up,
+decoded at per-sequence positions, evicted on their own EOS — finished
+rows are never decoded again.  The run always reports the kernel-dispatch
+STATS: in CI it is the regression signal that the serving graph really
+traced onto the Pallas kernels (``attention_paged_pallas`` > 0 for the
+decode loop) instead of silently falling back to XLA.  ``--json`` emits
+the whole report as one JSON object on stdout so CI parses it instead of
+grepping log lines.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.api import QuantConfig, integerize_params
 from repro.kernels import dispatch
+from repro.launch.engine import PagedEngine, Request
 from repro.models import lm
 
 
 def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
-          max_len: int | None = None, greedy: bool = True):
-    """prompts: (B, S) int32 -> generated (B, gen_tokens) int32."""
-    b, s = prompts.shape
-    max_len = max_len or (s + gen_tokens)
-    prefill = jax.jit(lambda p, t: lm.prefill(p, {"tokens": t}, cfg,
-                                              max_len=max_len))
-    step = jax.jit(lambda p, t, c: lm.decode_step(p, t, c, cfg))
+          max_len: int | None = None, page_size: int = 16,
+          eos_id: int | None = None, batch_size: int | None = None):
+    """prompts: (B, S) int32 (or a list of ragged 1-D prompts) ->
+    (generated (B, gen_tokens) int32, stats).
+
+    Runs the continuous-batching engine; with equal-length prompts and no
+    EOS this reproduces the old lockstep loop, but rows finish (and new
+    work is admitted) independently.
+    """
+    if hasattr(prompts, "shape"):
+        prompts = [np.asarray(prompts[i], np.int32)
+                   for i in range(prompts.shape[0])]
+    lens = [len(p) for p in prompts]
+    max_len = max_len or (max(lens) + gen_tokens)
+    bucket = max(lens)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=gen_tokens,
+                    eos_id=eos_id) for i, p in enumerate(prompts)]
 
     t0 = time.perf_counter()
-    logits, cache = prefill(params, prompts)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    engine = PagedEngine(cfg, params, batch_size=batch_size or len(reqs),
+                         max_len=max_len, page_size=page_size,
+                         prefill_buckets=(bucket,))
+    engine.run(reqs)
+    total_s = time.perf_counter() - t0
 
-    out = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    t0 = time.perf_counter()
-    for _ in range(gen_tokens):
-        out.append(tok)
-        logits, cache = step(params, tok, cache)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, 1)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    return (jnp.concatenate(out, axis=1),
-            {"prefill_s": t_prefill, "decode_s": t_decode,
-             "tok_per_s": b * gen_tokens / max(t_decode, 1e-9),
-             "dispatch": dict(dispatch.STATS)})
+    gen = np.zeros((len(reqs), gen_tokens), np.int32)
+    for i, r in enumerate(reqs):
+        gen[i, :len(r.tokens)] = r.tokens
+    n_tok = sum(len(r.tokens) for r in reqs)
+    decode_s = sum(r.decode_s for r in reqs) / max(len(reqs), 1)
+    return jnp.asarray(gen), {
+        "total_s": total_s,
+        "prefill_s": total_s - decode_s,
+        "decode_s": decode_s,
+        "tok_per_s": n_tok / max(total_s, 1e-9),
+        "per_seq": [{"rid": r.rid, "prompt_len": len(r.prompt),
+                     "gen": len(r.tokens),
+                     "admitted_step": r.admitted_step,
+                     "finished_step": r.finished_step,
+                     "tok_per_s": r.tok_per_s} for r in reqs],
+        "engine_steps": engine.step_count,
+        "dispatch": dict(dispatch.STATS),
+    }
 
 
 def main(argv=None):
@@ -62,9 +87,19 @@ def main(argv=None):
                          "(default: REPRO_KERNEL_BACKEND / xla)")
     ap.add_argument("--wbits", type=int, default=4)
     ap.add_argument("--kv-bits", type=int, default=8, choices=[4, 8])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode batch rows (continuous batching admits "
+                         "more requests than rows as they free up)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests (default: --batch)")
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="max prompt length; requests get staggered "
+                         "lengths up to this")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as one JSON object on stdout")
     args = ap.parse_args(argv)
     if args.backend:
         dispatch.set_backend(args.backend)
@@ -78,12 +113,29 @@ def main(argv=None):
                          kv_bits=args.kv_bits, mode="int")
         params = integerize_params(params, qc)
         cfg = cfg.replace(quant=qc)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab).astype(jnp.int32)
+    n_req = args.requests or args.batch
+    rng = np.random.RandomState(0)
+    # Staggered prompt lengths: the multi-tenant regime the paged cache is
+    # for (equal lengths only when prompt-len leaves no room to stagger).
+    lens = [max(1, args.prompt_len - (i * args.prompt_len) // (2 * n_req))
+            for i in range(n_req)]
+    prompts = [rng.randint(0, cfg.vocab, n).astype(np.int32) for n in lens]
     dispatch.reset_stats()
-    toks, stats = serve(cfg, params, prompts, gen_tokens=args.gen)
-    print(f"[serve:{args.mode}] prefill {stats['prefill_s']:.3f}s  "
-          f"decode {stats['decode_s']:.3f}s  {stats['tok_per_s']:.1f} tok/s")
+    toks, stats = serve(cfg, params, prompts, gen_tokens=args.gen,
+                        page_size=args.page_size, eos_id=args.eos_id,
+                        batch_size=args.batch)
+    if args.json:
+        print(json.dumps({"mode": args.mode, "backend": args.backend,
+                          "sample": toks[0, :12].tolist(), **stats},
+                         indent=2))
+        return
+    print(f"[serve:{args.mode}] total {stats['total_s']:.3f}s  "
+          f"decode {stats['decode_s']:.3f}s  {stats['tok_per_s']:.1f} tok/s  "
+          f"steps {stats['engine_steps']}")
+    for s in stats["per_seq"]:
+        print(f"  [seq {s['rid']}] prompt {s['prompt_len']:4d}  "
+              f"gen {s['gen']:3d}  admitted@{s['admitted_step']}  "
+              f"finished@{s['finished_step']}  {s['tok_per_s']:.1f} tok/s")
     print("[dispatch] " + "  ".join(f"{k}={v}"
                                     for k, v in stats["dispatch"].items()))
     print("sample:", toks[0, :12].tolist())

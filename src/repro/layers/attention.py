@@ -29,6 +29,13 @@ nibble-packed ``QTensor``s (uint8 codes, ``bits == 4``) — together with
 unwritten slot).  The Pallas decode kernel consumes that storage format
 directly; only the XLA fallback unpacks nibbles (to int8 codes — never to
 float) before its einsums.
+
+Paged KV caches (continuous batching) use :func:`paged_attention` instead:
+shared ``(num_pages, Hkv, page_size, D[/2])`` pools, a per-sequence
+``(B, max_pages)`` page table, per-sequence positions and per-sequence
+KV scales.  The Pallas paged kernel reads the pools in place; the XLA
+fallback gathers each sequence's pages as *codes* and runs the full-row
+oracle grid per row (int mode), or gathers stored floats (float mode).
 """
 from __future__ import annotations
 
@@ -154,6 +161,67 @@ def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
         p = jax.nn.softmax(x, axis=-1)
     p = p.astype(q.dtype)
     return jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+
+
+def paged_attention(q, k_pages, v_pages, k_scale, v_scale, page_table, pos,
+                    spec: AttnSpec, cfg: Optional[QuantConfig] = None):
+    """One decode step of multi-head attention over a PAGED KV cache.
+
+    q: (B, Hq, 1, D) float; k_pages, v_pages: shared page pools as stored —
+    (num_pages, Hkv, page_size, D) int8 codes / floats, or (..., D//2)
+    uint8 nibbles (int4).  ``page_table``: (B, max_pages) int32, negative =
+    unallocated; ``pos``: (B,) int32 per-sequence positions (negative =
+    inactive row, output unspecified); ``k_scale``/``v_scale``: (B,)
+    per-sequence dequantization steps (ignored for float pools).  Returns
+    (B, Hq, 1, D).
+
+    int mode dispatches to the Pallas paged kernel when supported; the XLA
+    fallback gathers pages per sequence as codes (nibbles unpack to int8 —
+    never to float) and evaluates the same page-streamed running-m grid
+    (``bk = page_size``), each row on its own quantization scales — so the
+    two backends emit bit-identical codes and toggling the backend never
+    changes served outputs.
+    """
+    b, hq, _, d = q.shape
+    hkv = k_pages.shape[1]
+    g = hq // hkv
+    mode = cfg.mode if cfg is not None else "float"
+    if mode == "int":
+        from repro.kernels import ref as kref
+        from repro.kernels.dispatch import (maybe_paged_attention,
+                                            paged_query_grid)
+        out = maybe_paged_attention(q, k_pages, v_pages, k_scale, v_scale,
+                                    spec, cfg, page_table=page_table,
+                                    pos=pos)
+        if out is not None:                    # Pallas kernel path
+            return out
+        # Same grid derivation as the kernel path (paged_query_grid), so
+        # the backends stay bit-identical by construction.
+        qq, sc = paged_query_grid(q, spec, cfg, k_scale)
+        out = kref.int_paged_decode_attention_ref(
+            qq.reshape(b, hkv, g, d), k_pages, v_pages, sc, v_scale,
+            page_table, pos, attn_bits=cfg.attn_bits, window=spec.window,
+            bk=k_pages.shape[2])
+        return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+    # float pools: gather (stored floats ARE the storage format) + softmax.
+    from repro.kernels.ref import gather_pages
+    k = gather_pages(k_pages, page_table)              # (B, Hkv, total, D)
+    v = gather_pages(v_pages, page_table)
+    ps = k_pages.shape[2]
+    total = page_table.shape[1] * ps
+    kpos = jnp.where(jnp.repeat(page_table >= 0, ps, axis=1),
+                     jnp.arange(total)[None, :], -1)   # (B, total)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    if spec.window is not None:
+        valid &= kpos > (pos[:, None] - spec.window)
+    scale = spec.softmax_scale or (1.0 / d ** 0.5)
+    x = jnp.einsum("bhgd,bhkd->bhgk", q.reshape(b, hkv, g, d),
+                   k.astype(q.dtype)).astype(jnp.float32) * scale
+    x = jnp.where(valid[:, None, None, :], x, NEG_BIG)
+    p = jax.nn.softmax(x, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(q.dtype))
+    return out.reshape(b, hq, 1, d)
 
 
 def attention(q, k, v, spec: AttnSpec, cfg: Optional[QuantConfig] = None, *,

@@ -17,6 +17,25 @@ to :func:`repro.layers.attention.attention` as a ``QTensor`` plus the
 ``k_positions`` slot->position map (negative = unwritten).  Nothing is
 unpacked or dequantized here: the Pallas decode kernel reads the packed
 ring in place and streams only live blocks; only the XLA fallback unpacks.
+
+Paged KV-cache contract (continuous batching, :func:`init_paged_cache`):
+instead of per-batch rings, every attention layer owns shared
+``(num_pages + 1, Hkv, page_size, hd[/2])`` page pools (the extra last
+page is the TRASH page — all masked/unallocated writes land there and it
+is never read), and the cache top level carries per-sequence state:
+``pos (B,)`` (negative = inactive row) and ``page_table (B, max_pages)``
+(sequence b's logical page l lives in physical page ``page_table[b, l]``;
+negative = unallocated).  Scales are per-sequence ``(B,)`` so admitting a
+hot sequence can never re-scale another tenant's cached codes.  Logical
+position p of a sequence lives at page ``p // page_size``, row
+``p % page_size`` — the slot->position map of the ring becomes implicit.
+Ragged prefill (``batch["lengths"]``) writes each row's own pages and
+masks pad positions to the trash page; decode writes one row per sequence
+at its own ``pos[b]`` and attends through
+:func:`repro.layers.attention.paged_attention`, which streams only that
+sequence's live pages.  Page allocation/recycling policy lives in
+:mod:`repro.launch.engine` — this module only reads/writes what the page
+table names.
 """
 from __future__ import annotations
 
@@ -29,7 +48,7 @@ import jax.numpy as jnp
 from repro.core.api import QuantConfig, dense
 from repro.core.quant import QTensor
 from repro.layers import moe as moe_lib
-from repro.layers.attention import AttnSpec, attention
+from repro.layers.attention import AttnSpec, attention, paged_attention
 from repro.layers.embed import embed_lookup, init_embed
 from repro.layers.mlp import init_mlp, mlp
 from repro.layers.moe import MoEConfig
@@ -208,10 +227,144 @@ def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _paged_attn_cache(cfg: LMConfig, batch: int, num_pages: int,
+                      page_size: int) -> dict:
+    """Shared page pools (+1 trash page) with per-sequence (B,) scales."""
+    mode = cfg.quant.mode if cfg.quant else "float"
+    kv4 = mode == "int" and cfg.quant.kv_bits == 4
+    dk = cfg.hd // 2 if kv4 else cfg.hd
+    dt = jnp.uint8 if kv4 else (jnp.int8 if mode == "int" else cfg.jdtype)
+    shape = (num_pages + 1, cfg.kv_heads, page_size, dk)
+    c = {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
+    if mode == "int":
+        c["k_scale"] = jnp.ones((batch,), jnp.float32)
+        c["v_scale"] = jnp.ones((batch,), jnp.float32)
+    return c
+
+
+def init_paged_cache(cfg: LMConfig, batch: int, max_len: int, *,
+                     page_size: int = 32,
+                     num_pages: Optional[int] = None) -> dict:
+    """Paged serving cache: page pools per attention layer, shared tables.
+
+    ``max_len`` bounds any single sequence (sets ``max_pages`` =
+    page-table width); ``num_pages`` sizes the shared physical pool
+    (default: no overcommit, ``batch * max_pages``).  All rows start
+    inactive (``pos = -1``) with empty page tables; recurrent blocks keep
+    their usual per-row states.
+    """
+    unit, n_units, rem = unit_structure(cfg)
+    max_pages = -(-max_len // page_size)
+    if num_pages is None:
+        num_pages = batch * max_pages
+    cache = {"pos": jnp.full((batch,), -1, jnp.int32),
+             "page_table": jnp.full((batch, max_pages), -1, jnp.int32)}
+
+    def blockc(kind):
+        if kind in ("attn", "local"):
+            return _paged_attn_cache(cfg, batch, num_pages, page_size)
+        return init_block_cache(cfg, kind, batch, max_len)
+
+    if n_units:
+        def one(_):
+            return {f"b{j}": blockc(kind) for j, kind in enumerate(unit)}
+        cache["units"] = jax.vmap(one)(jnp.arange(n_units))
+    for i, kind in enumerate(rem):
+        cache[f"rem{i}"] = blockc(kind)
+    return cache
+
+
+# ---------------------------------------------------------------------------
 # Blocks
 # ---------------------------------------------------------------------------
 
-def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode):
+def _paged_write_decode(cache, k1, v1, positions, page_table, mode, qcfg):
+    """Write one decoded key/value per sequence into its own page.
+
+    k1, v1: (B, Hkv, hd).  Row b goes to physical page
+    ``page_table[b, pos_b // page_size]`` at page row ``pos_b % page_size``;
+    unallocated/inactive rows land in the trash page.  Codes are emitted on
+    each sequence's own (B,) scale.
+    """
+    pos = positions[:, 0]
+    num_phys = cache["k_pages"].shape[0] - 1       # last page = trash
+    ps = cache["k_pages"].shape[2]
+    if mode == "int" and qcfg.kv_bits == 4:
+        from repro.core.quant import pack_int4, qrange
+        qmin, qmax = qrange(4)
+        ks, vs = cache["k_scale"], cache["v_scale"]
+        kq = pack_int4(jnp.clip(jnp.round(k1 / ks[:, None, None]),
+                                qmin, qmax).astype(jnp.int8))
+        vq = pack_int4(jnp.clip(jnp.round(v1 / vs[:, None, None]),
+                                qmin, qmax).astype(jnp.int8))
+    elif mode == "int":
+        kq = jnp.round(k1 / cache["k_scale"][:, None, None]).astype(jnp.int8)
+        vq = jnp.round(v1 / cache["v_scale"][:, None, None]).astype(jnp.int8)
+    else:
+        kq = k1.astype(cache["k_pages"].dtype)
+        vq = v1.astype(cache["v_pages"].dtype)
+    logical = jnp.clip(pos // ps, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    phys = jnp.where((phys >= 0) & (pos >= 0), phys, num_phys)
+    row = jnp.mod(pos, ps)
+    ck = cache["k_pages"].at[phys, :, row].set(kq)
+    cv = cache["v_pages"].at[phys, :, row].set(vq)
+    return dict(cache, k_pages=ck, v_pages=cv)
+
+
+def _paged_write_prefill(cache, k, v, positions, lengths, page_table, mode,
+                         qcfg):
+    """Scatter a whole (ragged) prompt's keys/values into per-row pages.
+
+    k, v: (B, Hkv, S, hd).  Row b's positions ``>= lengths[b]`` are pad:
+    they are excluded from the per-sequence scale calibration and their
+    writes land in the trash page.  Returns the cache with pools and
+    per-sequence scales updated.
+    """
+    b, _, s, _ = k.shape
+    num_phys = cache["k_pages"].shape[0] - 1
+    ps = cache["k_pages"].shape[2]
+    lens = jnp.full((b,), s, jnp.int32) if lengths is None \
+        else jnp.asarray(lengths, jnp.int32)
+    valid = positions < lens[:, None]                        # (B, S)
+    new_cache = dict(cache)
+    if mode == "int":
+        from repro.core.quant import pack_int4, qrange
+        kv4 = qcfg.kv_bits == 4
+        qmin, qmax = qrange(4) if kv4 else qrange(8)
+        vmask = valid[:, None, :, None]
+
+        def rowscale(t):
+            amax = jnp.max(jnp.abs(t) * vmask, axis=(1, 2, 3))
+            return jnp.maximum(amax.astype(jnp.float32), 1e-8) / qmax
+
+        ksc, vsc = rowscale(k), rowscale(v)
+        kq = jnp.clip(jnp.round(k / ksc[:, None, None, None]),
+                      qmin, qmax).astype(jnp.int8)
+        vq = jnp.clip(jnp.round(v / vsc[:, None, None, None]),
+                      qmin, qmax).astype(jnp.int8)
+        if kv4:
+            kq, vq = pack_int4(kq), pack_int4(vq)
+        new_cache["k_scale"], new_cache["v_scale"] = ksc, vsc
+    else:
+        kq = k.astype(cache["k_pages"].dtype)
+        vq = v.astype(cache["v_pages"].dtype)
+    logical = jnp.clip(positions // ps, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, logical, axis=1)    # (B, S)
+    phys = jnp.where(valid & (phys >= 0), phys, num_phys)
+    row = jnp.mod(positions, ps)
+    upd_k = kq.transpose(0, 2, 1, 3)                           # (B,S,Hkv,dk)
+    upd_v = vq.transpose(0, 2, 1, 3)
+    new_cache["k_pages"] = cache["k_pages"].at[phys, :, row].set(upd_k)
+    new_cache["v_pages"] = cache["v_pages"].at[phys, :, row].set(upd_v)
+    return new_cache
+
+
+def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode,
+                page_table=None, lengths=None):
     b, s, _ = x.shape
     hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.kv_heads
     qcfg = cfg.quant
@@ -234,8 +387,28 @@ def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode):
     spec = AttnSpec(causal=cfg.causal, window=window, q_chunk=cfg.q_chunk)
     mode = qcfg.mode if qcfg else "float"
     new_cache = cache
+    paged = cache is not None and "k_pages" in cache
 
-    if cache is not None and decode:
+    if paged and decode:
+        # Paged decode: write each row at its own position, then attend
+        # through the per-sequence page tables (only that row's live pages
+        # stream; scales are per-sequence).
+        new_cache = _paged_write_decode(cache, jnp.squeeze(k, 2),
+                                        jnp.squeeze(v, 2), positions,
+                                        page_table, mode, qcfg)
+        ones = jnp.ones((b,), jnp.float32)
+        out = paged_attention(q, new_cache["k_pages"], new_cache["v_pages"],
+                              new_cache.get("k_scale", ones),
+                              new_cache.get("v_scale", ones),
+                              page_table, positions[:, 0], spec, qcfg)
+    elif paged:
+        # Paged (ragged) prefill: attention over the fresh prompt is the
+        # ordinary prefill path; the cache write scatters each row's keys
+        # into its own pages (pad positions -> trash page).
+        out = attention(q, k, v, spec, qcfg, q_offset=0)
+        new_cache = _paged_write_prefill(cache, k, v, positions, lengths,
+                                         page_table, mode, qcfg)
+    elif cache is not None and decode:
         # Ring-buffer cache: slot(p) = p % span (full caches are span>=pos+1).
         pos = positions[0, 0]
         span = cache["k"].shape[2]
@@ -321,13 +494,13 @@ def _merge(x):
 
 
 def apply_block(x, p, cfg: LMConfig, kind: str, *, positions, cache=None,
-                decode=False):
+                decode=False, page_table=None, lengths=None):
     aux = {}
     h = apply_norm(x, p["ln1"], cfg.norm)
     h = shard(h, "batch", "seq_tp", None)
     if kind in ("attn", "local"):
         out, new_cache = _attn_mixer(h, p["attn"], cfg, kind, positions,
-                                     cache, decode)
+                                     cache, decode, page_table, lengths)
     elif kind == "rglru":
         out, new_cache = rglru_block(h, p["rglru"], cfg.quant,
                                      state=cache if decode else None)
@@ -360,11 +533,13 @@ def _zeros_aux():
 
 
 def stack_forward(x, params, cfg: LMConfig, *, positions, cache=None,
-                  decode=False):
+                  decode=False, page_table=None, lengths=None):
     unit, n_units, rem = unit_structure(cfg)
     has_cache = cache is not None
     aux = _zeros_aux()
 
+    # page_table/lengths are shared (not layer-stacked): they ride into the
+    # scanned unit body as closure constants, not scanned xs.
     def unit_body(carry, xs):
         x, aux = carry
         up = xs[0]
@@ -374,7 +549,8 @@ def stack_forward(x, params, cfg: LMConfig, *, positions, cache=None,
             bc = uc[f"b{j}"] if has_cache else None
             x, nbc, a = apply_block(x, up[f"b{j}"], cfg, kind,
                                     positions=positions, cache=bc,
-                                    decode=decode)
+                                    decode=decode, page_table=page_table,
+                                    lengths=lengths)
             new_uc[f"b{j}"] = nbc
             if "lb_loss" in a:
                 aux = aux + a["lb_loss"]
@@ -396,7 +572,8 @@ def stack_forward(x, params, cfg: LMConfig, *, positions, cache=None,
     for i, kind in enumerate(rem):
         bc = cache[f"rem{i}"] if has_cache else None
         x, nbc, a = apply_block(x, params[f"rem{i}"], cfg, kind,
-                                positions=positions, cache=bc, decode=decode)
+                                positions=positions, cache=bc, decode=decode,
+                                page_table=page_table, lengths=lengths)
         if has_cache:
             new_cache[f"rem{i}"] = nbc
         if "lb_loss" in a:
@@ -412,19 +589,40 @@ def _inputs_to_x(params, batch, cfg: LMConfig):
 
 
 def forward(params, batch, cfg: LMConfig, *, cache=None, decode=False):
-    """Returns (pre-head hidden states, new_cache, aux)."""
+    """Returns (pre-head hidden states, new_cache, aux).
+
+    With a paged cache, ``cache["pos"]`` is per-sequence (B,) — each row
+    decodes at its own position; inactive rows (``pos < 0``) stay frozen.
+    Ragged prefill takes ``batch["lengths"]`` (defaults to the padded
+    length) and leaves ``pos = lengths`` per row.
+    """
     x = _inputs_to_x(params, batch, cfg)
+    paged = cache is not None and "page_table" in cache
+    page_table = cache["page_table"] if paged else None
+    lengths = batch.get("lengths") if paged and not decode else None
     if decode:
-        positions = jnp.broadcast_to(cache["pos"], (x.shape[0], 1))
+        positions = cache["pos"][:, None] if paged else \
+            jnp.broadcast_to(cache["pos"], (x.shape[0], 1))
     else:
         positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
                                      (x.shape[0], x.shape[1]))
     x, new_cache, aux = stack_forward(x, params, cfg, positions=positions,
-                                      cache=cache, decode=decode)
+                                      cache=cache, decode=decode,
+                                      page_table=page_table, lengths=lengths)
     x = apply_norm(x, params["final_norm"], cfg.norm)
     if new_cache is not None:
-        new_cache["pos"] = (cache["pos"] if cache else 0) + \
-            (1 if decode else x.shape[1])
+        if paged:
+            if decode:           # inactive rows (pos < 0) do not advance
+                new_cache["pos"] = jnp.where(cache["pos"] >= 0,
+                                             cache["pos"] + 1, cache["pos"])
+            else:
+                new_cache["pos"] = jnp.full(
+                    (x.shape[0],), x.shape[1], jnp.int32) \
+                    if lengths is None else \
+                    jnp.asarray(lengths, jnp.int32)
+        else:
+            new_cache["pos"] = (cache["pos"] if cache else 0) + \
+                (1 if decode else x.shape[1])
     return x, new_cache, aux
 
 
@@ -463,6 +661,25 @@ def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None):
     x, cache, _ = forward(params, batch, cfg, cache=cache, decode=False)
     logits = logits_fn(params, x[:, -1:], cfg)
     return logits, cache
+
+
+def paged_prefill(params, batch, cfg: LMConfig, cache):
+    """Ragged prompt prefill into an existing paged cache.
+
+    ``batch["tokens"]`` is (B, S) right-padded; ``batch["lengths"]`` (B,)
+    gives each row's true prompt length (default S).  Pages named by
+    ``cache["page_table"]`` must already be allocated for every row's
+    prompt (see :mod:`repro.launch.engine`); pad positions write to the
+    trash page.  Returns (last-real-position logits (B, 1, V), cache).
+    """
+    x, cache, _ = forward(params, batch, cfg, cache=cache, decode=False)
+    lengths = batch.get("lengths")
+    if lengths is None:
+        last = x[:, -1:]
+    else:
+        idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, x.shape[1] - 1)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    return logits_fn(params, last, cfg), cache
 
 
 def decode_step(params, token, cache, cfg: LMConfig):

@@ -296,7 +296,8 @@ def test_lm_prefill_and_decode_both_dispatch():
 def test_kernel_bench_json(tmp_path):
     from benchmarks import kernel_bench
     out = tmp_path / "BENCH_kernels.json"
-    rows, design, decode = kernel_bench.main(["--quick", "--json", str(out)])
+    rows, design, decode, paged = kernel_bench.main(
+        ["--quick", "--json", str(out)])
     import json
     payload = json.loads(out.read_text())
     assert payload["kernels"] and all("wall_us" in r
@@ -315,3 +316,13 @@ def test_kernel_bench_json(tmp_path):
     assert loop["pallas"]["stats"]["attention_decode_pallas"] > 0
     assert loop["pallas"]["stats"]["attention_xla"] == 0
     assert loop["xla"]["stats"]["attention_decode_pallas"] == 0
+    # Paged multi-tenant decode: per-sequence pages beat the batch-max
+    # ring on bytes/step, and the timed continuous-batching loop really
+    # dispatched onto the paged kernel.
+    for a in payload["paged"]["analytic"]:
+        assert a["paged_bytes_per_step"] < a["ring_bytes_per_step"]
+        assert a["ring_over_paged"] > 1.0
+    ploop = payload["paged"]["loop"]
+    assert ploop["pallas"]["stats"]["attention_paged_pallas"] > 0
+    assert ploop["xla"]["stats"]["attention_paged_pallas"] == 0
+    assert ploop["xla"]["stats"]["attention_paged_xla"] > 0

@@ -1,0 +1,182 @@
+"""Continuous-batching engine: admission, eviction, recycling, isolation.
+
+The engine must serve a heterogeneous request stream through one
+fixed-shape jitted step: staggered prompt lengths, more requests than
+batch rows (admit-on-free), per-sequence EOS eviction, and page recycling
+across evict-then-readmit — with every request's greedy token stream
+identical to the same request served alone.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import QuantConfig, integerize_params
+from repro.kernels import dispatch
+from repro.launch.engine import PagedEngine, Request
+from repro.models import lm
+
+
+def _setup(mode="int"):
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int") \
+        if mode == "int" else None
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None))
+    if qc is not None:
+        params = integerize_params(params, qc)
+    return cfg, params
+
+
+def _prompts(lens, vocab=64, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, vocab, n).astype(np.int32) for n in lens]
+
+
+ENGINE_KW = dict(batch_size=2, max_len=64, page_size=8,
+                 prefill_buckets=(32,))
+
+
+def _run_solo(cfg, params, prompt, max_new, **kw):
+    eng = PagedEngine(cfg, params, **{**ENGINE_KW, **kw})
+    req = Request(rid=0, prompt=prompt, max_new_tokens=max_new)
+    eng.run([req])
+    return req.tokens
+
+
+def test_staggered_multi_tenant_matches_solo():
+    """4 ragged requests through 2 rows (interleaved admits/evictions):
+    every request's token stream == its solo run."""
+    cfg, params = _setup()
+    prompts = _prompts([7, 19, 32, 3])
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=3 + i % 2)
+            for i, p in enumerate(prompts)]
+    eng = PagedEngine(cfg, params, **ENGINE_KW)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    # later requests were admitted only once a row freed up
+    assert max(r.admitted_step for r in reqs) > 0
+    for r in reqs:
+        solo = _run_solo(cfg, params, r.prompt, r.max_new_tokens)
+        assert r.tokens == solo, (r.rid, r.tokens, solo)
+
+
+def test_pages_recycle_on_eviction():
+    """Evict-then-readmit: recycled physical pages serve the next tenant
+    correctly (tokens still == solo) and the free list fully refills."""
+    cfg, params = _setup()
+    prompts = _prompts([17, 11, 23], seed=1)
+    # pool sized so the 3rd request MUST reuse pages freed by the others
+    eng = PagedEngine(cfg, params, **{**ENGINE_KW, "num_pages": 8})
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    first_pages = {}
+    orig_admit = eng._admit
+
+    def record_admit(req, row):
+        orig_admit(req, row)
+        first_pages[req.rid] = list(eng.row_pages[row])
+
+    eng._admit = record_admit
+    eng.run(reqs)
+    assert len(eng.free_pages) == eng.num_pages
+    used_early = set(first_pages[0]) | set(first_pages[1])
+    assert set(first_pages[2]) & used_early    # really recycled pages
+    for r in reqs:
+        solo = _run_solo(cfg, params, r.prompt, r.max_new_tokens,
+                         num_pages=8)
+        assert r.tokens == solo, (r.rid, r.tokens, solo)
+
+
+def test_per_sequence_eos_evicts_early():
+    cfg, params = _setup()
+    prompt = _prompts([9], seed=2)[0]
+    probe = _run_solo(cfg, params, prompt, 6)
+    eos = probe[1]                              # finish after 2 tokens
+    eng = PagedEngine(cfg, params, **ENGINE_KW)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=6, eos_id=eos)
+    other = Request(rid=1, prompt=_prompts([5], seed=3)[0],
+                    max_new_tokens=5)
+    eng.run([req, other])
+    assert req.tokens == probe[:2]              # stopped at ITS eos
+    assert req.finished_step < other.finished_step
+    assert len(other.tokens) == 5               # neighbour unaffected
+
+
+def test_engine_never_retraces_decode_step():
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, **ENGINE_KW)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(_prompts([4, 26, 9], seed=4))]
+    eng.run(reqs)
+    assert eng._step._cache_size() == 1         # one trace, ever
+
+
+def test_engine_rejects_impossible_request():
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, **{**ENGINE_KW, "num_pages": 2})
+    eng.submit(Request(rid=0, prompt=_prompts([30], seed=5)[0],
+                       max_new_tokens=8))
+    with pytest.raises(RuntimeError, match="pages"):
+        eng.run()
+
+
+def test_engine_rejects_request_exceeding_max_len():
+    """prompt + max_new beyond max_len must refuse cleanly (RuntimeError),
+    not crash mid-admission after pages were popped from the free list."""
+    cfg, params = _setup()
+    # max_len=64, page_size=8 -> max_pages=4... use a small table:
+    eng = PagedEngine(cfg, params, batch_size=2, max_len=32, page_size=8,
+                      prefill_buckets=(32,))     # max_pages = 4
+    assert eng.max_pages == 4
+    req = Request(rid=0, prompt=_prompts([20], seed=7)[0],
+                  max_new_tokens=20)             # needs 5 > 4 pages
+    eng.submit(req)
+    with pytest.raises(RuntimeError, match="at most"):
+        eng.run()
+    assert len(eng.free_pages) == eng.num_pages  # nothing leaked
+
+
+def test_engine_runs_paged_kernel_under_pallas():
+    """The fixed-shape step traces onto the Pallas paged kernel (STATS),
+    and tokens match the XLA backend run exactly."""
+    cfg, params = _setup()
+    prompts = _prompts([7, 12], seed=6)
+
+    def run(backend):
+        dispatch.reset_stats()
+        with dispatch.use_backend(backend):
+            reqs = [Request(rid=i, prompt=p, max_new_tokens=3)
+                    for i, p in enumerate(prompts)]
+            PagedEngine(cfg, params, **ENGINE_KW).run(reqs)
+        return [r.tokens for r in reqs], dict(dispatch.STATS)
+
+    toks_x, stats_x = run("xla")
+    toks_p, stats_p = run("pallas")
+    assert stats_p["attention_paged_pallas"] > 0
+    assert stats_x["attention_paged_pallas"] == 0
+    assert stats_x["attention_paged_xla"] > 0
+    assert toks_p == toks_x
+
+
+def test_serve_json_reports_paged_dispatch(capsys):
+    """Tier-1 CI smoke: the serve CLI's --json output carries the dispatch
+    STATS with attention_paged_pallas > 0 under --backend pallas."""
+    import json
+
+    from repro.launch import serve
+    prev = dispatch.get_backend()
+    try:
+        serve.main(["--arch", "qwen2.5-32b", "--mode", "int",
+                    "--backend", "pallas", "--batch", "2", "--requests", "2",
+                    "--prompt-len", "8", "--gen", "2", "--page-size", "8",
+                    "--json"])
+    finally:
+        dispatch.set_backend(prev)                # main() sets it globally
+    out = capsys.readouterr().out
+    payload = json.loads(out[out.index("{"):])
+    assert payload["dispatch"]["attention_paged_pallas"] > 0
+    assert payload["engine_steps"] >= 1
+    assert len(payload["per_seq"]) == 2
+    assert all(s["gen"] == 2 for s in payload["per_seq"])

@@ -1,0 +1,284 @@
+"""Paged KV cache: per-sequence pages/positions/scales, tenant isolation.
+
+The paged decode path must behave, per sequence, exactly as if that
+sequence were served alone: a staggered-length multi-tenant batch is
+bit-identical per row to the solo run on every implementation (Pallas
+kernel, XLA gather fallback, ref.py oracles), packed int4 pages included.
+The Pallas kernel and the XLA fallback share the page-streamed running-m
+grid, so toggling the backend never changes served outputs (asserted
+bitwise); model-level tests additionally pin the paged cache to the
+teacher-forced forward (float mode is exact) and to per-row ragged decode
+under both backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import QuantConfig, integerize_params
+from repro.core.quant import pack_int4
+from repro.kernels import dispatch, ref
+from repro.kernels.int_attention import int_paged_decode_attention
+from repro.layers.attention import AttnSpec, paged_attention
+from repro.models import lm
+
+
+def _rel_close(a, b, tol=1e-5):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    scale = np.abs(b).max() + 1e-9
+    np.testing.assert_allclose(a / scale, b / scale, atol=tol)
+
+
+def _pools(num_phys, hkv, ps, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    mk = lambda k: jax.random.randint(k, (num_phys, hkv, ps, d), -8,
+                                      8).astype(jnp.int8)
+    return mk(key), mk(jax.random.fold_in(key, 1))
+
+
+def _tables(pos_list, ps, max_pages, *, stride=None):
+    """Disjoint per-row page tables covering each row's live span."""
+    b = len(pos_list)
+    pt = np.full((b, max_pages), -1, np.int32)
+    nxt = 0
+    for i, p in enumerate(pos_list):
+        need = 0 if p < 0 else p // ps + 1
+        for l in range(need):
+            pt[i, l] = nxt
+            nxt += 1
+    return jnp.asarray(pt), nxt
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+# Staggered positions incl. page-boundary cases (pos % ps == 0 / ps-1) and
+# an inactive row; window cases clip the live span mid-table.
+CASES = [
+    ([7, 33, 64], 16, None),
+    ([0, 15, 16], 16, None),           # page-boundary: first slot of page 2
+    ([5, 47, 12], 8, 10),              # window clips to a mid-table span
+    ([31, -1, 3], 8, None),            # inactive row rides along
+]
+
+
+@pytest.mark.parametrize("pos_list,ps,window", CASES)
+def test_paged_kernel_matches_streamed_oracle(pos_list, ps, window):
+    hkv, g, d = 2, 4, 32
+    max_pages = max(pos_list) // ps + 2
+    pt, used = _tables(pos_list, ps, max_pages)
+    kp, vp = _pools(used + 2, hkv, ps, d, seed=ps + len(pos_list))
+    q = jax.random.randint(jax.random.PRNGKey(7),
+                           (len(pos_list), hkv, g, d), -8, 8).astype(jnp.int8)
+    pos = jnp.asarray(pos_list, jnp.int32)
+    sc = 0.02 + 0.01 * jnp.arange(len(pos_list), dtype=jnp.float32)
+    vs = 0.01 + 0.002 * jnp.arange(len(pos_list), dtype=jnp.float32)
+    out = int_paged_decode_attention(q, kp, vp, sc, vs, pt, pos,
+                                     window=window)
+    want = ref.int_paged_decode_attention_ref(q, kp, vp, sc, vs, pt, pos,
+                                              window=window, bk=ps)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_paged_kernel_masks_hole_in_live_span():
+    """An unallocated page-table entry INSIDE the live span must contribute
+    nothing (kernel == oracle == the same table with the hole's span
+    causally out of reach), not attend whatever lives in physical page 0."""
+    hkv, g, d, ps = 2, 2, 16, 8
+    kp, vp = _pools(8, hkv, ps, d, seed=21)
+    q = jax.random.randint(jax.random.PRNGKey(3), (1, hkv, g, d), -8,
+                           8).astype(jnp.int8)
+    pos = jnp.asarray([20])                       # live logical pages 0..2
+    holed = jnp.asarray([[3, -1, 5, -1]], jnp.int32)
+    out = int_paged_decode_attention(q, kp, vp, 0.02, 0.01, holed, pos)
+    want = ref.int_paged_decode_attention_ref(q, kp, vp, 0.02, 0.01,
+                                              holed, pos, bk=ps)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    # and the hole really is dead: swapping what page 0 holds changes nothing
+    out2 = int_paged_decode_attention(q, kp.at[0].set(7), vp.at[0].set(7),
+                                      0.02, 0.01, holed, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_paged_kernel_int4_packed_in_place():
+    hkv, g, d, ps = 2, 4, 8, 32
+    pt, used = _tables([19, 42], ps, 7)
+    kp, vp = _pools(used + 1, hkv, ps, d, seed=3)
+    kp, vp = jnp.clip(kp, -8, 7), jnp.clip(vp, -8, 7)
+    q = jax.random.randint(jax.random.PRNGKey(1), (2, hkv, g, d), -8,
+                           8).astype(jnp.int8)
+    pos = jnp.asarray([19, 42])
+    packed = int_paged_decode_attention(q, pack_int4(kp), pack_int4(vp),
+                                        0.02, 0.01, pt, pos, packed=True)
+    plain = int_paged_decode_attention(q, kp, vp, 0.02, 0.01, pt, pos)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(plain))
+
+
+def test_paged_batch_rows_bit_identical_to_solo():
+    """Tenant isolation: each row of a staggered batch == its solo run, on
+    the kernel, the XLA fallback, and the oracle (all bitwise)."""
+    hkv, g, d, ps = 2, 2, 16, 8
+    pos_list = [7, 33, 64]
+    pt, used = _tables(pos_list, ps, 9)
+    kp, vp = _pools(used + 1, hkv, ps, d, seed=9)
+    q = jax.random.randint(jax.random.PRNGKey(5), (3, hkv, g, d), -8,
+                           8).astype(jnp.int8)
+    pos = jnp.asarray(pos_list)
+    sc = jnp.asarray([0.02, 0.05, 0.03])
+    vs = jnp.asarray([0.01, 0.02, 0.015])
+    for fn in (
+        lambda *a: int_paged_decode_attention(*a),
+        lambda *a: ref.int_paged_decode_attention_ref(*a, bk=ps),
+        lambda *a: ref.int_paged_decode_attention_ref(*a),
+    ):
+        batch = fn(q, kp, vp, sc, vs, pt, pos)
+        for i in range(3):
+            solo = fn(q[i:i + 1], kp, vp, sc[i:i + 1], vs[i:i + 1],
+                      pt[i:i + 1], pos[i:i + 1])
+            np.testing.assert_array_equal(np.asarray(solo[0]),
+                                          np.asarray(batch[i]))
+
+
+def test_paged_attention_backend_bit_parity():
+    """paged_attention: Pallas kernel == XLA gather fallback, bitwise —
+    both run the page-streamed grid on per-row scales."""
+    b, hq, hkv, d, ps = 3, 4, 2, 16, 8
+    pt, used = _tables([12, 30, 3], ps, 5)
+    kp, vp = _pools(used + 1, hkv, ps, d, seed=11)
+    q = jax.random.normal(jax.random.PRNGKey(2), (b, hq, 1, d))
+    pos = jnp.asarray([12, 30, 3])
+    ks = jnp.asarray([0.1, 0.12, 0.09])
+    vs = jnp.asarray([0.05, 0.06, 0.055])
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    spec = AttnSpec(causal=True)
+    dispatch.reset_stats()
+    a_xla = paged_attention(q, kp, vp, ks, vs, pt, pos, spec, cfg)
+    with dispatch.use_backend("pallas"):
+        a_pal = paged_attention(q, kp, vp, ks, vs, pt, pos, spec, cfg)
+    assert dispatch.STATS["attention_paged_pallas"] == 1
+    assert dispatch.STATS["attention_paged_xla"] == 1
+    np.testing.assert_array_equal(np.asarray(a_pal, np.float32),
+                                  np.asarray(a_xla, np.float32))
+
+
+def test_paged_decode_supported_policy():
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    spec = AttnSpec()
+    q = jnp.zeros((2, 4, 1, 8))
+    kp = jnp.zeros((6, 2, 8, 8), jnp.int8)
+    pt = jnp.zeros((2, 3), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    ok = dispatch.paged_decode_supported
+    assert ok(q, kp, spec, cfg, pt, pos)
+    assert not ok(jnp.zeros((2, 4, 2, 8)), kp, spec, cfg, pt, pos)  # Sq>1
+    assert not ok(q, kp, spec, cfg.replace(attn_bits=9), pt, pos)
+    assert not ok(q, kp, spec, cfg.replace(softmax="exact"), pt, pos)
+    # packed pools: D must be even and pool depth D//2
+    assert ok(q, jnp.zeros((6, 2, 8, 4), jnp.uint8), spec, cfg, pt, pos)
+    assert not ok(q, jnp.zeros((6, 2, 8, 8), jnp.uint8), spec, cfg, pt, pos)
+
+
+# ---------------------------------------------------------------------------
+# model level: ragged paged serving
+# ---------------------------------------------------------------------------
+
+def _alloc_all(cache):
+    """Identity page tables: row b owns pages [b*P, (b+1)*P)."""
+    b, p = cache["page_table"].shape
+    pt = np.arange(b * p, dtype=np.int32).reshape(b, p)
+    return dict(cache, page_table=jnp.asarray(pt))
+
+
+def test_paged_decode_matches_forward_float():
+    """Paged prefill + per-row decode == teacher-forced forward (exact)."""
+    cfg = lm.LMConfig(name="t", n_layers=4, d_model=64, n_heads=4,
+                      kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+                      q_chunk=8, remat=False)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    x, _, _ = lm.forward(params, {"tokens": toks}, cfg)
+    full_logits = lm.logits_fn(params, x, cfg)
+    cache = _alloc_all(lm.init_paged_cache(cfg, 2, 32, page_size=4))
+    _, cache = lm.paged_prefill(
+        params, {"tokens": toks[:, :8],
+                 "lengths": jnp.asarray([8, 8])}, cfg, cache)
+    for t in range(8, 16):
+        logits, cache = lm.decode_step(params, toks[:, t:t + 1], cache, cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=5e-4, atol=5e-4)
+    assert cache["pos"].tolist() == [16, 16]
+
+
+def test_paged_ragged_prefill_last_logit_per_row():
+    """Ragged prefill returns each row's logits at ITS last real token."""
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                      kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+                      q_chunk=8, remat=False)
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab)
+    x, _, _ = lm.forward(params, {"tokens": toks}, cfg)
+    full_logits = lm.logits_fn(params, x, cfg)
+    cache = _alloc_all(lm.init_paged_cache(cfg, 2, 16, page_size=4))
+    logits, cache = lm.paged_prefill(
+        params, {"tokens": toks, "lengths": jnp.asarray([8, 5])}, cfg, cache)
+    np.testing.assert_allclose(np.asarray(logits[0, 0]),
+                               np.asarray(full_logits[0, 7]), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(logits[1, 0]),
+                               np.asarray(full_logits[1, 4]), atol=5e-4)
+    assert cache["pos"].tolist() == [8, 5]
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_paged_lm_ragged_decode_dispatches_and_tracks_xla(kv_bits):
+    """Ragged int decode (page-boundary wraps included): pallas tracks the
+    XLA paged path step for step and really runs the paged kernel."""
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=kv_bits,
+                     mode="int")
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    lengths = jnp.asarray([10, 7])
+    # page_size 4: decode crosses page boundaries for both rows
+    cx = _alloc_all(lm.init_paged_cache(cfg, 2, 32, page_size=4))
+    cp = _alloc_all(lm.init_paged_cache(cfg, 2, 32, page_size=4))
+    batch = {"tokens": toks, "lengths": lengths}
+    lx, cx = lm.paged_prefill(params, batch, cfg, cx)
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas"):
+        lp, cp = lm.paged_prefill(params, batch, cfg, cp)
+    tok = jnp.argmax(lx, -1).astype(jnp.int32)
+    for _ in range(6):
+        lx, cx = lm.decode_step(params, tok, cx, cfg)
+        with dispatch.use_backend("pallas"):
+            lp, cp = lm.decode_step(params, tok, cp, cfg)
+        _rel_close(lp, lx, tol=2e-5)
+        tok = jnp.argmax(lx, -1).astype(jnp.int32)
+    assert dispatch.STATS["attention_paged_pallas"] >= 1
+    assert cx["pos"].tolist() == cp["pos"].tolist() == [16, 13]
+    if kv_bits == 4:
+        leaf = cx["units"]["b0"]["k_pages"]
+        assert leaf.dtype == jnp.uint8          # packed pages stay packed
+
+
+def test_paged_cache_per_sequence_scales():
+    """k_scale/v_scale are (B,): one hot row cannot re-scale another's."""
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    cache = _alloc_all(lm.init_paged_cache(cfg, 2, 16, page_size=4))
+    assert cache["units"]["b0"]["k_scale"].shape == (2, 2)  # (units, B)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab)
+    _, cache = lm.paged_prefill(
+        params, {"tokens": toks, "lengths": jnp.asarray([8, 3])}, cfg, cache)
+    ks = np.asarray(cache["units"]["b0"]["k_scale"])[0]
+    assert ks[0] != ks[1]                       # calibrated per sequence
