@@ -13,10 +13,21 @@ dispatch STATS proving the Pallas decode kernel actually served it) and
 the analytic per-step bytes-read / MAC comparison of the in-place
 ring-cache decode kernel vs the XLA fallback — and the PAGED section:
 a timed multi-tenant continuous-batching loop through
-``launch.engine.PagedEngine`` under both backends, plus the analytic
+``launch.engine.PagedEngine`` under both backends, the analytic
 per-step KV bytes of the per-sequence paged kernel vs the contiguous
-ring (which always streams the batch-max live span for every row).
+ring (which always streams the batch-max live span for every row), and
+the ADMISSION section: a timed N-arrival admission drain, burst (one
+batched prefill, the PR-4 path) vs the same N arrivals dripped one per
+drain (the PR-3 cost model: N batch=1 prefills), both backends with
+pre-warmed jits.  The loops' ``stats`` snapshots also carry
+``STATS["blocks"]`` — the dispatch layer's chosen tile sizes per shape,
+the baseline a future measured autotuner diffs against.
 ``--quick`` restricts to the smallest shapes (CI-sized run).
+
+``--check [PATH]`` loads a previous ``--json`` dump and exits nonzero if
+any analytic bytes/step or MAC count regressed (wall-clocks excluded —
+CPU noise).  No timed loops run, so it is fast enough for the ``smoke``
+pre-push subset (see pytest.ini).
 """
 from __future__ import annotations
 
@@ -35,6 +46,19 @@ from repro.kernels.int_attention import attention_macs
 PEAK_INT8 = 394e12
 PEAK_BF16 = 197e12
 HBM = 819e9
+
+# Shapes shared by run() and the --check analytic recomputation.
+ATTN_DESIGN_SHAPE = (4, 1024, 64)
+DECODE_SHAPES = [
+    (8, 4, 8192, 1024, 128, 8),
+    (8, 4, 8192, 1024, 128, 4),
+    (8, 4, 8192, 512, 128, 8),       # window=512
+]
+PAGED_SHAPES = [
+    (8, 4, 128, [127, 1023, 8191], 128, 8),
+    (8, 4, 128, [127, 1023, 8191], 128, 4),
+    (8, 4, 256, [255, 255, 255, 16383], 128, 8),
+]
 
 
 def _time(f, *args, n=20):
@@ -143,6 +167,91 @@ def paged_step_analytic(h, g, page_size, pos_list, d, kv_bits):
     }
 
 
+def _bench_lm():
+    """One smoke LM + integerized params shared by the timed loops."""
+    from repro.core.api import QuantConfig, integerize_params
+    from repro.models import lm
+
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    cfg = lm.LMConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
+                      kv_heads=2, d_ff=128, vocab=128, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    return cfg, params
+
+
+def admission_burst(quick=False):
+    """Timed N-arrival admission drain: burst vs one-at-a-time.
+
+    Burst submits all N same-bucket requests before one drain — ONE
+    batched admission prefill writes every prompt's KV codes straight into
+    the shared pools (the PR-4 path).  Serial feeds the same requests one
+    drain at a time — N batch-width-1 prefills, the PR-3 cost model (its
+    page-copy pass excluded, so the measured speedup is conservative).
+    Jits are pre-warmed and shared, so wall-clocks compare drain work, not
+    compile time; ``prefill_calls`` proves the batching.
+    """
+    import numpy as np
+
+    from repro.kernels import dispatch
+    from repro.launch.engine import PagedEngine, Request
+
+    cfg, params = _bench_lm()
+    n = 2 if quick else 4
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, 12).astype(np.int32)
+               for _ in range(n)]
+
+    def engine(share_from=None):
+        eng = PagedEngine(cfg, params, batch_size=n, max_len=32,
+                          page_size=8, prefill_buckets=(16,))
+        if share_from is not None:      # same cfg/params: traces are reusable
+            eng._step = share_from._step
+            eng._admit_prefill = share_from._admit_prefill
+        return eng
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=1)
+                for i, p in enumerate(prompts)]
+
+    res = {}
+    for backend in ("xla", "pallas"):
+        with dispatch.use_backend(backend):
+            warm = engine()
+            warm.run(reqs())                        # compiles the W=n trace
+            drip_warm = engine(warm)
+            for r in reqs():                        # compiles the W=1 trace
+                drip_warm.submit(r)
+                drip_warm.step()
+
+            burst = engine(warm)
+            for r in reqs():
+                burst.submit(r)
+            t0 = time.perf_counter()
+            burst._drain_queue()
+            jax.block_until_ready(burst.cache)
+            burst_s = time.perf_counter() - t0
+
+            serial = engine(warm)
+            t0 = time.perf_counter()
+            for r in reqs():
+                serial.submit(r)
+                serial._drain_queue()
+            jax.block_until_ready(serial.cache)
+            serial_s = time.perf_counter() - t0
+
+            res[backend] = {
+                "requests": n,
+                "burst_drain_s": burst_s,
+                "serial_drain_s": serial_s,
+                "burst_speedup": serial_s / max(burst_s, 1e-9),
+                "prefill_calls_burst": burst.prefill_calls,
+                "prefill_calls_serial": serial.prefill_calls,
+            }
+    return res
+
+
 def paged_loop(quick=False):
     """Timed multi-tenant continuous-batching loop under both backends.
 
@@ -153,17 +262,10 @@ def paged_loop(quick=False):
     """
     import numpy as np
 
-    from repro.core.api import QuantConfig, integerize_params
     from repro.kernels import dispatch
     from repro.launch.engine import PagedEngine, Request
-    from repro.models import lm
 
-    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
-    cfg = lm.LMConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
-                      kv_heads=2, d_ff=128, vocab=128, dtype="float32",
-                      q_chunk=16, remat=False, quant=qc)
-    params = integerize_params(
-        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    cfg, params = _bench_lm()
     rng = np.random.RandomState(0)
     lens = [5, 11] if quick else [5, 11, 17, 8]
     gen = 2 if quick else 4
@@ -183,9 +285,10 @@ def paged_loop(quick=False):
             dt = time.perf_counter() - t0
             res[backend] = {
                 "requests": len(reqs), "engine_steps": eng.step_count,
+                "prefill_calls": eng.prefill_calls,
                 "tok_per_s": sum(len(r.tokens) for r in reqs) / dt,
                 "per_seq_tok_per_s": [round(r.tok_per_s, 2) for r in reqs],
-                "stats": dict(dispatch.STATS)}
+                "stats": dispatch.snapshot()}
     return res
 
 
@@ -196,16 +299,10 @@ def decode_loop(quick=False):
     that matters is the dispatch STATS and the analytic bytes above); kept
     tiny so it runs in CI.
     """
-    from repro.core.api import QuantConfig, integerize_params
     from repro.kernels import dispatch
     from repro.models import lm
 
-    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
-    cfg = lm.LMConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
-                      kv_heads=2, d_ff=128, vocab=128, dtype="float32",
-                      q_chunk=16, remat=False, quant=qc)
-    params = integerize_params(
-        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    cfg, params = _bench_lm()
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
     gen = 2 if quick else 8
     res = {}
@@ -225,7 +322,7 @@ def decode_loop(quick=False):
             jax.block_until_ready(tok)
             dt = time.perf_counter() - t0
             res[backend] = {"tok_per_s": toks.shape[0] * gen / dt,
-                            "stats": dict(dispatch.STATS)}
+                            "stats": dispatch.snapshot()}
     return res
 
 
@@ -260,7 +357,7 @@ def run(quick=False):
                  "t_memory_us": (x.size * 4 + x.size) / HBM * 1e6})
 
     # int attention (XLA ref path) + kernel-design analytics.
-    h, s, d = 4, 1024, 64
+    h, s, d = ATTN_DESIGN_SHAPE
     qq = jax.random.randint(key, (h, s, d), -8, 8).astype(jnp.int8)
     f_attn = jax.jit(lambda q: kref.int_attention_ref(q, q, q, 0.002, 0.01))
     us_attn = _time(f_attn, qq, n=2 if quick else 5)
@@ -272,24 +369,75 @@ def run(quick=False):
     # Decode: in-place ring-cache kernel vs XLA fallback (serving shapes:
     # long full ring early in decode, and a windowed ring).
     decode = {
-        "analytic": [
-            decode_step_analytic(8, 4, 8192, 1024, 128, 8),
-            decode_step_analytic(8, 4, 8192, 1024, 128, 4),
-            decode_step_analytic(8, 4, 8192, 512, 128, 8),   # window=512
-        ],
+        "analytic": [decode_step_analytic(*sh) for sh in DECODE_SHAPES],
         "loop": decode_loop(quick=quick),
     }
 
-    # Paged multi-tenant decode: per-sequence pages vs the batch-max ring.
+    # Paged multi-tenant decode: per-sequence pages vs the batch-max ring;
+    # admission: batched burst prefill vs one-at-a-time.
     paged = {
-        "analytic": [
-            paged_step_analytic(8, 4, 128, [127, 1023, 8191], 128, 8),
-            paged_step_analytic(8, 4, 128, [127, 1023, 8191], 128, 4),
-            paged_step_analytic(8, 4, 256, [255, 255, 255, 16383], 128, 8),
-        ],
+        "analytic": [paged_step_analytic(*sh) for sh in PAGED_SHAPES],
         "loop": paged_loop(quick=quick),
+        "admission": admission_burst(quick=quick),
     }
     return rows, design, decode, paged
+
+
+# ---------------------------------------------------------------------------
+# Regression guard (--check)
+# ---------------------------------------------------------------------------
+
+# Analytic fields where a larger value is strictly worse (bytes / MACs).
+GUARDED_DESIGN = ("single_pass_macs", "single_pass_kv_hbm_bytes")
+GUARDED_DECODE = ("pallas_bytes_per_step", "pallas_bytes_per_step_wrapped",
+                  "decode_macs_per_step")
+GUARDED_PAGED = ("paged_bytes_per_step", "paged_macs_per_step")
+
+
+def analytic_payload():
+    """The shape-derived (timer-free) subset of the --json payload."""
+    return {
+        "attention_design": attention_design_analytic(*ATTN_DESIGN_SHAPE),
+        "decode": {"analytic": [decode_step_analytic(*sh)
+                                for sh in DECODE_SHAPES]},
+        "paged": {"analytic": [paged_step_analytic(*sh)
+                               for sh in PAGED_SHAPES]},
+    }
+
+
+def check_regressions(cur, prev):
+    """Regressions (new > old) in analytic bytes/step or MAC counts.
+
+    Entries are matched by shape key, so adding/removing shapes never
+    trips the guard; wall-clocks are never compared (CPU noise).
+    """
+    regs = []
+    pd = prev.get("attention_design", {})
+    for k in GUARDED_DESIGN:
+        if k in pd and cur["attention_design"][k] > pd[k]:
+            regs.append(f"attention_design.{k}: "
+                        f"{pd[k]} -> {cur['attention_design'][k]}")
+
+    def by_key(entries, fields):
+        return {tuple(str(e[f]) for f in fields): e for e in entries}
+
+    dkey = ("span", "live", "d", "kv_bits")
+    prev_d = by_key(prev.get("decode", {}).get("analytic", []), dkey)
+    for e in cur["decode"]["analytic"]:
+        old = prev_d.get(tuple(str(e[f]) for f in dkey))
+        for k in GUARDED_DECODE:
+            if old and e[k] > old[k]:
+                regs.append(f"decode[span={e['span']},live={e['live']},"
+                            f"kv={e['kv_bits']}].{k}: {old[k]} -> {e[k]}")
+    pkey = ("page_size", "pos", "d", "kv_bits")
+    prev_p = by_key(prev.get("paged", {}).get("analytic", []), pkey)
+    for e in cur["paged"]["analytic"]:
+        old = prev_p.get(tuple(str(e[f]) for f in pkey))
+        for k in GUARDED_PAGED:
+            if old and e[k] > old[k]:
+                regs.append(f"paged[ps={e['page_size']},pos={e['pos']}]."
+                            f"{k}: {old[k]} -> {e[k]}")
+    return regs
 
 
 def main(argv=None):
@@ -299,7 +447,23 @@ def main(argv=None):
                     help="write results to JSON (default BENCH_kernels.json)")
     ap.add_argument("--quick", action="store_true",
                     help="smallest shapes only (CI-sized)")
+    ap.add_argument("--check", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="compare analytic bytes/MACs against a previous "
+                         "--json dump and exit 1 on regression (timer-free)")
     args = ap.parse_args(argv)
+
+    if args.check:
+        with open(args.check) as f:
+            prev = json.load(f)
+        regs = check_regressions(analytic_payload(), prev)
+        for r in regs:
+            print(f"REGRESSION: {r}")
+        if regs:
+            raise SystemExit(1)
+        print(f"--check OK: no analytic bytes/MAC regressions vs "
+              f"{args.check}")
+        return None
 
     rows, design, decode, paged = run(quick=args.quick)
     for r in rows:
@@ -332,8 +496,16 @@ def main(argv=None):
         st = r["stats"]
         print(f"paged_loop[{backend}],{r['tok_per_s']:.2f} tok/s,"
               f"steps={r['engine_steps']},"
+              f"prefills={r['prefill_calls']},"
               f"paged_pallas={st['attention_paged_pallas']},"
               f"paged_xla={st['attention_paged_xla']}")
+    for backend, r in paged["admission"].items():
+        print(f"admission_burst[{backend}],n={r['requests']},"
+              f"burst={r['burst_drain_s'] * 1e3:.1f}ms,"
+              f"serial={r['serial_drain_s'] * 1e3:.1f}ms,"
+              f"speedup={r['burst_speedup']:.2f}x,"
+              f"prefills={r['prefill_calls_burst']}"
+              f"/{r['prefill_calls_serial']}")
 
     if args.json:
         payload = {"kernels": rows, "attention_design": design,

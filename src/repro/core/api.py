@@ -90,10 +90,13 @@ def dense(x: jax.Array, p: dict, cfg: Optional[QuantConfig], *,
         y = maybe_qlinear(x, p, cfg)       # Pallas backend; None -> XLA
         if y is not None:
             return y
-        if x.ndim == 3 and x.shape[1] == 1:
-            # Single-token decode batch: calibrate per sequence (finest
-            # grid AND multi-tenant isolation — one hot row must not
-            # coarsen another sequence's activation codes).
+        if x.ndim == 3:
+            # (B, S, K) serving activations — decode steps AND (ragged
+            # batched) prefill — calibrate per sequence: the finest grid,
+            # multi-tenant isolation (one hot row must not coarsen another
+            # sequence's activation codes), and the property that makes a
+            # batched admission prefill bit-identical per row to running
+            # each prompt alone.
             dx = quant.absmax_scale(x, cfg.a_bits, axis=(1, 2))
             xq = quant.quantize_tensor(x, cfg.a_bits, scale=dx)
         else:

@@ -63,6 +63,7 @@ import os
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant
 from repro.core.softmax2 import LOG2E
@@ -87,12 +88,26 @@ _backend = [_checked(os.environ.get("REPRO_KERNEL_BACKEND", "xla"),
 STATS = {"qlinear_pallas": 0, "qlinear_xla": 0,
          "attention_pallas": 0, "attention_decode_pallas": 0,
          "attention_paged_pallas": 0, "attention_paged_xla": 0,
-         "attention_xla": 0}
+         "attention_xla": 0,
+         # chosen tile sizes per (op, shape) — the baseline the future
+         # measured autotuner (ROADMAP) diffs against; serialized by
+         # kernel_bench --json and the serve CLI report.
+         "blocks": {}}
 
 
 def reset_stats():
     for k in STATS:
-        STATS[k] = 0
+        STATS[k] = {} if k == "blocks" else 0
+
+
+def snapshot() -> dict:
+    """JSON-serializable copy of STATS (the blocks dict deep-copied)."""
+    return {k: (dict(v) if isinstance(v, dict) else v)
+            for k, v in STATS.items()}
+
+
+def _record_blocks(op: str, key: str, *choice: int):
+    STATS["blocks"][f"{op}:{key}"] = list(choice)
 
 
 def get_backend() -> str:
@@ -170,8 +185,14 @@ def qmatmul_blocks(m: int, n: int, k: int, *,
 
 
 def attention_blocks(sq: int, sk: int, d: int, *, window: Optional[int] = None,
+                     chunk: Optional[int] = None,
                      budget: int = VMEM_BUDGET) -> tuple[int, int]:
     """(bq, bk) for the fused attention kernel.
+
+    ``chunk`` is the XLA path's query-recalibration chunk length (see
+    :func:`chunk_len`): when given, bq is capped to its largest divisor so
+    a q tile never straddles two activation grids — the per-block scale
+    vector then maps one scale per tile.
 
     Tile VMEM ~ (bq + 2*bk)*d int8 operands + 9*bq*d f32 (out + carry) +
     5*bq*bk (f32 logits + int8 codes).  A single key block covering the
@@ -199,10 +220,14 @@ def attention_blocks(sq: int, sk: int, d: int, *, window: Optional[int] = None,
         bq = _halve(bq)
     while vmem(bq, bk) > budget and bk > _LANE:
         bk = _halve(bk)
+    if chunk is not None:
+        bq = next(x for x in range(min(bq, chunk), 0, -1) if chunk % x == 0)
     if narrow and bk < sk:
         # The shrink loops may have halved bq below the cap's assumption;
         # re-cap bk to the final live span (smaller bk is always VMEM-safe).
         bk = min(bk, _round_up(bq + window, _LANE))
+    _record_blocks("attention", f"sq{sq}_sk{sk}_d{d}_w{window}_c{chunk}",
+                   bq, bk)
     return bq, bk
 
 
@@ -217,6 +242,7 @@ def decode_blocks(span: int, d: int, *, budget: int = VMEM_BUDGET) -> int:
     bk = min(_round_up(span, _LANE), 4096)
     while 2 * bk * d + 4 * bk + 17 * 8 * d > budget and bk > _LANE:
         bk = _halve(bk)
+    _record_blocks("decode", f"span{span}_d{d}", bk)
     return bk
 
 
@@ -231,7 +257,9 @@ def paged_decode_blocks(page_size: int, d: int, *,
     any realistic page size (<= 4096 keys at d <= 256) fits easily.
     """
     if 2 * page_size * d + 17 * 8 * d > budget:
+        _record_blocks("paged_decode", f"ps{page_size}_d{d}", 0)
         return 0
+    _record_blocks("paged_decode", f"ps{page_size}_d{d}", page_size)
     return page_size
 
 
@@ -254,12 +282,14 @@ def qlinear_supported(x, p) -> bool:
 def maybe_qlinear(x, p: dict, cfg):
     """Pallas-backed dense() body; ``None`` -> caller uses the XLA path.
 
-    Flattens leading dims to 2D, quantizes the activation per-tensor (same
-    grid as the XLA path), keeps nibble-packed weights packed in HBM, and
-    folds ``dx_bar * dw`` plus bias into the kernel epilogue.  Single-token
-    decode batches ((B, 1, K) activations) quantize per sequence instead —
-    the kernel's per-row epilogue scale — so continuous-batching tenants
-    never share an activation grid (matches the XLA path in core.api).
+    Flattens leading dims to 2D, quantizes the activation on the same grid
+    as the XLA path, keeps nibble-packed weights packed in HBM, and folds
+    ``dx_bar * dw`` plus bias into the kernel epilogue.  ALL (B, S, K)
+    activations — decode steps and (ragged batched) prefill alike —
+    quantize per sequence via the kernel's per-row epilogue scale, so
+    continuous-batching tenants never share an activation grid and a
+    batched admission prefill is bit-identical per row to the solo run
+    (matches the XLA path in core.api).
     """
     if resolve_backend(cfg) != "pallas" or not qlinear_supported(x, p):
         STATS["qlinear_xla"] += 1
@@ -269,12 +299,12 @@ def maybe_qlinear(x, p: dict, cfg):
     packed = w_q.dtype == jnp.uint8
     kdim = x.shape[-1]
     n = w_q.shape[0]
-    per_row = x.ndim == 3 and x.shape[1] == 1
+    per_row = x.ndim == 3
     if per_row:
         codes, row_scale = quantize_rows(x, cfg.a_bits)
         x2 = codes.reshape(-1, kdim)
         scale = p["w_scale"].astype(jnp.float32)
-        row_scale = row_scale.astype(jnp.float32)
+        row_scale = jnp.repeat(row_scale.astype(jnp.float32), x.shape[1])
     else:
         xq = quant.quantize_tensor(x, cfg.a_bits)
         x2 = xq.q.reshape(-1, kdim)
@@ -378,23 +408,69 @@ def _as_q(x, bits):
         else quant.quantize_tensor(x, bits)
 
 
+def chunk_len(sq: int, q_chunk: int) -> int:
+    """The XLA path's query-recalibration chunk: largest c <= q_chunk
+    dividing Sq (``layers.attention`` re-quantizes q once per such chunk)."""
+    if sq <= q_chunk:
+        return sq
+    return next(c for c in range(q_chunk, 0, -1) if sq % c == 0)
+
+
 def _fused_call(q, k, v, spec, cfg):
     """Fold batch into the kernel's head grid axis and GQA groups along the
-    query rows (row r has position ``r % Sq`` via ``sq_mod``), quantizing
-    float inputs per-tensor exactly like the XLA int path.  int8 KV-cache
-    QTensors stream in without a dequantized copy."""
+    query rows (row r has position ``r % Sq`` via ``sq_mod``).
+
+    Float inputs quantize on PER-SEQUENCE grids — k/v per batch row, q per
+    (batch row, XLA query chunk) — exactly like the XLA int path, and the
+    resulting (B*Hkv, nq) logit-scale matrix rides the kernel's
+    scalar-prefetch stream so each bq-tile dequantizes with its own scale.
+    This closes the pallas-vs-XLA granularity gap at Sq > q_chunk (no more
+    single per-tensor scale papering over per-chunk recalibration) and
+    makes batched ragged prefill bit-identical per row to solo runs.
+    Pre-quantized QTensor operands keep their own single grid.  Narrow
+    local windows (Sk > 2*window) are the one remaining divergence: the
+    XLA path quantizes per-chunk key SLICES there while the kernel grids
+    the full key row per sequence, so those shapes agree to ~one prob
+    code, not bitwise (test_windowed_dispatch_straddling_blocks_close).
+    """
     b, hq, sq, d = q.shape
     hkv, sk = k.shape[1], k.shape[2]
     g = hq // hkv
     out_dtype = q.dtype if not isinstance(q, quant.QTensor) else jnp.float32
-    qq, kq, vq = (_as_q(x, cfg.a_bits) for x in (q, k, v))
     scale = spec.softmax_scale or (1.0 / d ** 0.5)
-    sc = scale * LOG2E * qq.scale * kq.scale    # same assoc as the XLA path
-    qf = qq.q.reshape(b, hkv, g, sq, d).reshape(b * hkv, g * sq, d)
-    kf = kq.q.reshape(b * hkv, sk, d)
-    vf = vq.q.reshape(b * hkv, sk, d)
-    bq, bk = attention_blocks(g * sq, sk, d, window=spec.window)
-    out = int_attention_fused(qf, kf, vf, sc, vq.scale,
+    quantized_in = any(isinstance(x, quant.QTensor) for x in (q, k, v))
+    if quantized_in:
+        qq, kq, vq = (_as_q(x, cfg.a_bits) for x in (q, k, v))
+        sc = scale * LOG2E * qq.scale * kq.scale    # same assoc as XLA
+        vs = vq.scale
+        qf = qq.q.reshape(b, hkv, g, sq, d).reshape(b * hkv, g * sq, d)
+        kf, vf = kq.q, vq.q
+        bq, bk = attention_blocks(g * sq, sk, d, window=spec.window)
+    else:
+        c = chunk_len(sq, spec.q_chunk)
+        n_ch = sq // c
+        qr = q.reshape(b, hkv, g, n_ch, c, d)
+        qsc = quant.absmax_scale(qr, cfg.a_bits, axis=(1, 2, 4, 5))
+        qf = quant.quantize(qr, qsc, cfg.a_bits) \
+            .reshape(b, hkv, g, sq, d).reshape(b * hkv, g * sq, d)
+        ksc = quant.absmax_scale(k, cfg.a_bits, axis=(1, 2, 3))
+        vsc = quant.absmax_scale(v, cfg.a_bits, axis=(1, 2, 3))
+        kf = quant.quantize(k, ksc, cfg.a_bits)
+        vf = quant.quantize(v, vsc, cfg.a_bits)
+        bq, bk = attention_blocks(g * sq, sk, d, window=spec.window,
+                                  chunk=c)
+        # One scale per bq-tile: tile i covers positions
+        # [(i*bq) % sq, +bq) of group (i*bq) // sq — inside one chunk
+        # because bq divides c.
+        nq = (g * sq) // bq
+        tile_chunk = (np.arange(nq) * bq % sq) // c
+        qs_b = qsc.reshape(b, n_ch)
+        sc = scale * LOG2E * qs_b[:, tile_chunk] * ksc.reshape(b, 1)
+        sc = jnp.repeat(sc, hkv, axis=0)            # (b*hkv, nq)
+        vs = jnp.repeat(vsc.reshape(b), hkv)        # (b*hkv,)
+    kf = kf.reshape(b * hkv, sk, d)
+    vf = vf.reshape(b * hkv, sk, d)
+    out = int_attention_fused(qf, kf, vf, sc, vs,
                               attn_bits=cfg.attn_bits, causal=spec.causal,
                               window=spec.window, bq=bq, bk=bk, sq_mod=sq,
                               interpret=interpret_default())
@@ -409,6 +485,9 @@ def _decode_call(q, k, v, spec, cfg, q_offset, k_positions):
     int4 nibbles with ``packed=True``) — the in-place read the tentpole is
     about: no unpacked/dequantized HBM copy, and only live ring blocks are
     DMA'd.  ``q_offset`` is the (possibly traced) absolute query position.
+    The ring path keeps its PER-TENSOR query grid (the whole batch shares
+    one ring cache and scale; per-sequence isolation is the paged path's
+    contract), matching the XLA fallback bit for bit.
     """
     b, hq, _, d = q.shape
     hkv, span = k.shape[1], k.shape[2]

@@ -29,7 +29,12 @@ Three kernels share that quantizer:
   advance together.  Key tiles are visited through a STATIC live-block map
   (scalar-prefetch index map): causal upper-triangle, out-of-window and
   padded key tiles are never DMA'd at all, so local attention streams only
-  the ~(bq + window) live keys per query block instead of all Sk.
+  the ~(bq + window) live keys per query block instead of all Sk.  The
+  logit scale ``sc`` may be a (H, nq) PER-QUERY-BLOCK matrix riding the
+  same scalar-prefetch stream: each bq-tile dequantizes with its own
+  activation grid (per-sequence, per-XLA-chunk — see kernels/dispatch.py),
+  which is what makes batched ragged prefill bit-identical per row to solo
+  runs.
 - :func:`int_decode_attention` — SINGLE-QUERY decode kernel (the per-token
   serving path): reads the int8 / int4-nibble-packed KV *ring cache in
   place*.  ``k_positions[j]`` gives ring slot ``j``'s absolute position
@@ -102,10 +107,14 @@ def _mask(i, kblk, bq, bk, sq_mod, sk, causal, window):
     return m
 
 
-def _tile_logits(q_ref, k_ref, sc_ref, valid):
-    """Masked, clamped base-2 logits of one tile (int8 MXU contraction)."""
+def _tile_logits(q_ref, k_ref, sc, valid):
+    """Masked, clamped base-2 logits of one tile (int8 MXU contraction).
+
+    ``sc`` is this tile's scalar logit scale — per (head-fold, q-block)
+    since PR 4, so every bq-tile dequantizes on its own activation grid.
+    """
     acc = jnp.dot(q_ref[0], k_ref[0].T, preferred_element_type=jnp.int32)
-    x = acc.astype(jnp.float32) * sc_ref[0, 0]
+    x = acc.astype(jnp.float32) * sc
     return jnp.maximum(jnp.where(valid, x, NEG), -120.0)
 
 
@@ -243,7 +252,7 @@ def _stats_kernel(q_ref, k_ref, sc_ref, s_ref, mb_ref, sb_ref, *,
     # the MXU contraction.
     @pl.when(jnp.any(valid))
     def _compute():
-        x = _tile_logits(q_ref, k_ref, sc_ref, valid)
+        x = _tile_logits(q_ref, k_ref, sc_ref[0, 0], valid)
         e, _, r = _online_update(x, mb_ref, qmax)
         sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
 
@@ -266,7 +275,7 @@ def _pv_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, s_ref, o_ref,
 
     @pl.when(jnp.any(valid))
     def _compute():
-        x = _tile_logits(q_ref, k_ref, sc_ref, valid)
+        x = _tile_logits(q_ref, k_ref, sc_ref[0, 0], valid)
         _, p_q, r = _online_update(x, mb_ref, qmax)
         pv = _pv_dot(p_q, v_ref[0], qmax)
         acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
@@ -277,10 +286,10 @@ def _pv_kernel(q_ref, k_ref, v_ref, sc_ref, vs_ref, s_ref, o_ref,
         o_ref[0] = acc_ref[...] * (dattn * vs_ref[0, 0])
 
 
-def _fused_kernel(meta_ref, q_ref, k_ref, v_ref, sc_ref, vs_ref, o_ref,
+def _fused_kernel(meta_ref, sc_ref, q_ref, k_ref, v_ref, vs_ref, o_ref,
                   mb_ref, sb_ref, acc_ref, *, nt, bq, bk, sq_mod, sk, causal,
                   window, qmax):
-    i, t = pl.program_id(1), pl.program_id(2)
+    h, i, t = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(t == 0)
     def _init():
@@ -297,7 +306,9 @@ def _fused_kernel(meta_ref, q_ref, k_ref, v_ref, sc_ref, vs_ref, o_ref,
 
     @pl.when(live & jnp.any(valid))
     def _compute():
-        x = _tile_logits(q_ref, k_ref, sc_ref, valid)
+        # Per-q-block activation scale, read straight from the prefetched
+        # (h, nq) vector: every bq-tile dequantizes on its own grid.
+        x = _tile_logits(q_ref, k_ref, sc_ref[h, i], valid)
         e, p_q, r = _online_update(x, mb_ref, qmax)
         pv = _pv_dot(p_q, v_ref[0], qmax)
         sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
@@ -394,7 +405,7 @@ def _paged_decode_kernel(meta_ref, q_ref, k_ref, v_ref, sc_ref, vs_ref,
 # Wrappers
 # ---------------------------------------------------------------------------
 
-def _prep(q_q, k_q, v_q, sc, v_scale, bq, bk):
+def _prep(q_q, k_q, v_q, bq, bk):
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
     pq_, pk_ = (-sq) % bq, (-sk) % bk
@@ -403,16 +414,35 @@ def _prep(q_q, k_q, v_q, sc, v_scale, bq, bk):
     if pk_:
         k_q = jnp.pad(k_q, ((0, 0), (0, pk_), (0, 0)))
         v_q = jnp.pad(v_q, ((0, 0), (0, pk_), (0, 0)))
-    sc2 = jnp.asarray(sc, jnp.float32).reshape(1, 1)
-    vs2 = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
-    return q_q, k_q, v_q, sc2, vs2, (sq + pq_) // bq, (sk + pk_) // bk
+    return q_q, k_q, v_q, (sq + pq_) // bq, (sk + pk_) // bk
+
+
+def _grid_scales(sc, v_scale, h, nq):
+    """Broadcast kernel epilogue scales to their grid shapes.
+
+    ``sc``: scalar (one grid for the whole call), (nq,) per-q-block vector,
+    or (h, nq) per (head-fold, q-block) — the finest granularity: dispatch
+    folds batch into the head axis and XLA-chunk-sized row groups into q
+    blocks, so per-sequence-per-chunk activation grids land here.
+    ``v_scale``: scalar or (h,) per-head-fold.  Returns ((h, nq) f32,
+    (h, 1) f32).
+    """
+    sc = jnp.asarray(sc, jnp.float32)
+    if sc.ndim == 1:
+        sc = sc[None, :]
+    sc = jnp.broadcast_to(sc, (h, nq))
+    vs = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32).reshape(-1, 1),
+                          (h, 1))
+    return sc, vs
 
 
 def _specs(bq, bk, d):
     return dict(
         qspec=pl.BlockSpec((1, bq, d), lambda h, i, k: (h, i, 0)),
         kspec=pl.BlockSpec((1, bk, d), lambda h, i, k: (h, k, 0)),
-        sspec=pl.BlockSpec((1, 1), lambda h, i, k: (0, 0)),
+        # per (head-fold, q-block) logit scale / per-head-fold v scale
+        scspec=pl.BlockSpec((1, 1), lambda h, i, k: (h, i)),
+        vsspec=pl.BlockSpec((1, 1), lambda h, i, k: (h, 0)),
         rowspec=pl.BlockSpec((1, bq), lambda h, i, k: (h, i)),
     )
 
@@ -425,8 +455,10 @@ def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
 
     q_q: (H, Sq, D) int8 (GQA pre-folded: G query groups stacked along Sq,
     row r has position ``r % sq_mod``; ``sq_mod`` defaults to Sq); k_q, v_q:
-    (H, Sk, D) int8.  ``sc`` = softmax_scale * dq * dk * log2(e) (scalar
-    f32); ``v_scale`` = dv.  Returns (H, Sq, D) f32.
+    (H, Sk, D) int8.  ``sc`` = softmax_scale * dq * dk * log2(e) — scalar,
+    (nq,) per-q-block, or (H, nq) per (head-fold, q-block) f32 (per-block
+    activation grids); ``v_scale`` = dv (scalar or (H,)).  Returns
+    (H, Sq, D) f32.
 
     Pass 1 sweeps K once for Sigma; pass 2 re-sweeps K, recomputing QK^T
     and the running-m code sequence (identical to the fused kernel's), and
@@ -438,8 +470,8 @@ def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
     qmax = float((1 << attn_bits) - 1)
-    q_q, k_q, v_q, sc2, vs2, nq, nk = _prep(q_q, k_q, v_q, sc, v_scale,
-                                            bq, bk)
+    q_q, k_q, v_q, nq, nk = _prep(q_q, k_q, v_q, bq, bk)
+    sc2, vs2 = _grid_scales(sc, v_scale, h, nq)
     sp = _specs(bq, bk, d)
     kw = dict(nk=nk, bq=bq, bk=bk, sq_mod=sq_mod or sq, sk=sk,
               causal=causal, window=window, qmax=qmax)
@@ -447,7 +479,7 @@ def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
     s = pl.pallas_call(
         functools.partial(_stats_kernel, **kw),
         grid=(h, nq, nk),
-        in_specs=[sp["qspec"], sp["kspec"], sp["sspec"]],
+        in_specs=[sp["qspec"], sp["kspec"], sp["scspec"]],
         out_specs=sp["rowspec"],
         out_shape=jax.ShapeDtypeStruct((h, nq * bq), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bq,), jnp.float32)] * 2,
@@ -457,8 +489,8 @@ def int_attention(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7, causal=True,
     out = pl.pallas_call(
         functools.partial(_pv_kernel, **kw),
         grid=(h, nq, nk),
-        in_specs=[sp["qspec"], sp["kspec"], sp["kspec"], sp["sspec"],
-                  sp["sspec"], sp["rowspec"]],
+        in_specs=[sp["qspec"], sp["kspec"], sp["kspec"], sp["scspec"],
+                  sp["vsspec"], sp["rowspec"]],
         out_specs=sp["qspec"],
         out_shape=jax.ShapeDtypeStruct((h, nq * bq, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
@@ -485,27 +517,34 @@ def int_attention_fused(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
     index map, :func:`_live_kblock_meta`): dead tiles — causal upper
     triangle, beyond the local window, key padding — are neither DMA'd nor
     visited, so windowed rows stream only their bounded live span.
+
+    Per-query-block activation scales: ``sc`` broadcast to (H, nq) rides
+    the scalar-prefetch stream next to the block map, so each bq-tile's
+    epilogue dequantizes with its own scale — dispatch threads per-sequence
+    per-XLA-chunk q grids through here, closing the granularity gap with
+    the chunked XLA path at Sq > q_chunk.
     """
     assert attn_bits <= MAX_PROB_BITS, \
         f"prob codes are <= {MAX_PROB_BITS}-bit (int8 carried, 8-bit biased)"
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
     qmax = float((1 << attn_bits) - 1)
-    q_q, k_q, v_q, sc2, vs2, nq, nk = _prep(q_q, k_q, v_q, sc, v_scale,
-                                            bq, bk)
+    q_q, k_q, v_q, nq, nk = _prep(q_q, k_q, v_q, bq, bk)
+    sc2, vs2 = _grid_scales(sc, v_scale, h, nq)
     meta, nt = _live_kblock_meta(nq, nk, bq, bk, sq_mod or sq, sk, causal,
                                  window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(h, nq, nt),
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda h, i, t, m: (h, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda h, i, t, m: (h, m[i, 1 + t], 0)),
-            pl.BlockSpec((1, bk, d), lambda h, i, t, m: (h, m[i, 1 + t], 0)),
-            pl.BlockSpec((1, 1), lambda h, i, t, m: (0, 0)),
-            pl.BlockSpec((1, 1), lambda h, i, t, m: (0, 0)),
+            pl.BlockSpec((1, bq, d), lambda h, i, t, m, s: (h, i, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, i, t, m, s: (h, m[i, 1 + t], 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda h, i, t, m, s: (h, m[i, 1 + t], 0)),
+            pl.BlockSpec((1, 1), lambda h, i, t, m, s: (h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, t, m: (h, i, 0)),
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, t, m, s: (h, i, 0)),
         scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
                         pltpu.VMEM((bq,), jnp.float32),
                         pltpu.VMEM((bq, d), jnp.float32)],
@@ -517,7 +556,7 @@ def int_attention_fused(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((h, nq * bq, d), jnp.float32),
         interpret=interpret,
-    )(meta, q_q, k_q, v_q, sc2, vs2)
+    )(meta, sc2, q_q, k_q, v_q, vs2)
     return out[:, :sq]
 
 
@@ -534,8 +573,10 @@ def int_decode_attention(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
     ``packed=True`` (unpacked on the VPU per tile; HBM reads stay halved).
     ``k_positions``: (span,) int32, ring slot j's absolute position
     (negative = unwritten slot, masked).  ``pos``: scalar int32 query
-    position (may be traced).  ``sc`` = softmax_scale * dq * dk * log2(e);
-    ``v_scale`` = dv.  Returns (H, G, D) f32.
+    position (may be traced).  ``sc`` = softmax_scale * dq * dk * log2(e),
+    scalar or (H,) per head-fold row (batch rows folded into H quantize
+    their single query per sequence); ``v_scale`` = dv (scalar or (H,)).
+    Returns (H, G, D) f32.
 
     Bounded-key streaming: a runtime block map (:func:`_decode_meta`,
     scalar-prefetched so index maps see it) DMAs only ring blocks holding a
@@ -566,8 +607,10 @@ def int_decode_attention(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
     pos = jnp.asarray(pos, jnp.int32)
     meta = _decode_meta(k_positions, pos, nk, bk, causal, window)
     kp2 = k_positions.reshape(1, nk * bk)
-    sc2 = jnp.asarray(sc, jnp.float32).reshape(1, 1)
-    vs2 = jnp.asarray(v_scale, jnp.float32).reshape(1, 1)
+    sc2 = jnp.broadcast_to(
+        jnp.asarray(sc, jnp.float32).reshape(-1, 1), (h, 1))
+    vs2 = jnp.broadcast_to(
+        jnp.asarray(v_scale, jnp.float32).reshape(-1, 1), (h, 1))
     dk = k_q.shape[-1]                  # d, or d//2 when nibble-packed
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -578,8 +621,8 @@ def int_decode_attention(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
             pl.BlockSpec((1, bk, dk), lambda h, t, m: (h, m[2 + t], 0)),
             pl.BlockSpec((1, bk, dk), lambda h, t, m: (h, m[2 + t], 0)),
             pl.BlockSpec((1, bk), lambda h, t, m: (0, m[2 + t])),
-            pl.BlockSpec((1, 1), lambda h, t, m: (0, 0)),
-            pl.BlockSpec((1, 1), lambda h, t, m: (0, 0)),
+            pl.BlockSpec((1, 1), lambda h, t, m: (h, 0)),
+            pl.BlockSpec((1, 1), lambda h, t, m: (h, 0)),
         ],
         out_specs=pl.BlockSpec((1, gq, d), lambda h, t, m: (h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((gq,), jnp.float32),

@@ -44,6 +44,14 @@ Two oracles are provided for attention:
   position and scales.  ``bk=None`` is the full-gather grid (the XLA
   serving fallback); ``bk = page_size`` streams pages in logical order,
   bit-matching ``kernels.int_paged_decode_attention``.
+
+Attention logit scales (``sc``) accept per-row forms everywhere: a scalar
+(per-tensor), a (sq,) per-query-row vector, or (h, sq) — the reference
+semantics of the kernels' per-query-block activation scales (each bq-tile
+of the fused kernel dequantizes on its own grid; rows of one tile share a
+scale).  ``v_scale`` accepts a scalar or (h,) per-head-fold vector.
+:func:`ragged_write_ref` is the loop oracle for the ragged paged-prefill
+pool scatter.
 """
 from __future__ import annotations
 
@@ -60,6 +68,30 @@ def qmatmul_ref(x_q, w_q, scale, bias=None):
     if bias is not None:
         out = out + bias[None, :]
     return out
+
+
+def _row_sc(sc, h, sq):
+    """Broadcast an attention logit scale to (h, sq, 1).
+
+    Accepts a scalar (per-tensor, the pre-PR-4 contract), a (sq,) per-query-
+    row vector (per-block activation scales expanded to rows), or a full
+    (h, sq) matrix (per-head-fold x per-row — what the dispatch layer builds
+    when batch rows fold into the head axis).
+    """
+    sc = jnp.asarray(sc, jnp.float32)
+    if sc.ndim == 0:
+        return sc
+    if sc.ndim == 1:
+        return jnp.broadcast_to(sc[None, :, None], (h, sq, 1))
+    return jnp.broadcast_to(sc[:, :, None], (h, sq, 1))
+
+
+def _head_sc(s, h):
+    """Broadcast a per-head-fold scale (scalar or (h,)) to (h, 1, 1)."""
+    s = jnp.asarray(s, jnp.float32)
+    if s.ndim == 0:
+        return s
+    return s.reshape(h, 1, 1)
 
 
 def _attn_mask(sq, sk, sq_mod, causal, window):
@@ -79,14 +111,17 @@ def int_attention_ref(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
 
     Same shapes/contract as kernels.int_attention; ``sq_mod`` is the true
     query length when G GQA groups are stacked along Sq (q row r has
-    position ``r % sq_mod``; defaults to Sq).
+    position ``r % sq_mod``; defaults to Sq).  ``sc`` may be a scalar, a
+    (sq,) per-query-row vector, or (h, sq) (per-block activation scales —
+    each query row carries its own quantization grid); ``v_scale`` a scalar
+    or (h,) per-head-fold vector.
     """
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
     qmax = (1 << attn_bits) - 1
     acc = jnp.einsum("hqd,hkd->hqk", q_q.astype(jnp.int32),
                      k_q.astype(jnp.int32))
-    x = acc.astype(jnp.float32) * sc
+    x = acc.astype(jnp.float32) * _row_sc(sc, h, sq)
     mask = _attn_mask(sq, sk, sq_mod or sq, causal, window)
     x = jnp.maximum(jnp.where(mask, x, -1e30), -120.0)
     m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))
@@ -96,7 +131,7 @@ def int_attention_ref(q_q, k_q, v_q, sc, v_scale, *, attn_bits=7,
     p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
     pv = jnp.einsum("hqk,hkd->hqd", p_q.astype(jnp.int32),
                     v_q.astype(jnp.int32))
-    return pv.astype(jnp.float32) * (dattn * v_scale)
+    return pv.astype(jnp.float32) * (dattn * _head_sc(v_scale, h))
 
 
 def int_attention_ref_streamed(q_q, k_q, v_q, sc, v_scale, *, bk,
@@ -108,6 +143,8 @@ def int_attention_ref_streamed(q_q, k_q, v_q, sc, v_scale, *, bk,
     the running ``m`` is updated first, the block's codes are emitted on the
     grid referenced to the *current* ``2^m``, and the integer PV partials
     are carried in f32 with an exact ``2^(m_old - m_new)`` rescale.
+    ``sc``/``v_scale`` accept the same per-row / per-head-fold forms as
+    :func:`int_attention_ref`.
     """
     h, sq, d = q_q.shape
     sk = k_q.shape[1]
@@ -123,7 +160,7 @@ def int_attention_ref_streamed(q_q, k_q, v_q, sc, v_scale, *, bk,
 
     acc_all = jnp.einsum("hqd,hkd->hqk", q_q.astype(jnp.int32),
                          k_q.astype(jnp.int32))
-    x_all = acc_all.astype(jnp.float32) * sc
+    x_all = acc_all.astype(jnp.float32) * _row_sc(sc, h, sq)
     x_all = jnp.maximum(jnp.where(mask[None], x_all, -1e30), -120.0)
 
     def block(carry, t):
@@ -143,7 +180,7 @@ def int_attention_ref_streamed(q_q, k_q, v_q, sc, v_scale, *, bk,
             jnp.zeros((h, sq, d)))
     (m, s, pv), _ = jax.lax.scan(block, init, jnp.arange(nk))
     dattn = (2.0 / qmax) / jnp.maximum(s, 1e-30)
-    return pv * (dattn * v_scale)
+    return pv * (dattn * _head_sc(v_scale, h))
 
 
 def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
@@ -154,7 +191,9 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
     unwritten, masked); all G GQA rows share query position ``pos``.
     ``bk=None``: full-row grid (== the XLA serving path).  Integer ``bk``:
     ring blocks stream in slot order, each quantized at the running grid —
-    bit-matches the Pallas decode kernel.
+    bit-matches the Pallas decode kernel.  ``sc``/``v_scale`` may be scalars
+    or (h,) per-head-fold vectors (batch rows folded into the head axis
+    quantize their queries per sequence).
     """
     h, g, d = q_q.shape
     span = k_q.shape[1]
@@ -166,7 +205,7 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
         mask &= k_positions > pos - window
     acc = jnp.einsum("hgd,hkd->hgk", q_q.astype(jnp.int32),
                      k_q.astype(jnp.int32))
-    x = acc.astype(jnp.float32) * sc
+    x = acc.astype(jnp.float32) * _head_sc(sc, h)
     x = jnp.maximum(jnp.where(mask[None, None, :], x, -1e30), -120.0)
 
     if bk is None:                                # full-row grid
@@ -176,7 +215,8 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
         p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
         pv = jnp.einsum("hgk,hkd->hgd", p_q.astype(jnp.int32),
                         v_q.astype(jnp.int32))
-        return pv.astype(jnp.float32) * ((2.0 / qmax) / s * v_scale)
+        return pv.astype(jnp.float32) * ((2.0 / qmax) / s
+                                         * _head_sc(v_scale, h))
 
     pad = (-span) % bk
     if pad:
@@ -200,7 +240,7 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
     init = (jnp.full((h, g, 1), -1e30), jnp.zeros((h, g, 1)),
             jnp.zeros((h, g, d)))
     (_, s, pv), _ = jax.lax.scan(block, init, jnp.arange(nk))
-    return pv * ((2.0 / qmax) / jnp.maximum(s, 1e-30) * v_scale)
+    return pv * ((2.0 / qmax) / jnp.maximum(s, 1e-30) * _head_sc(v_scale, h))
 
 
 def gather_pages(pages, page_table):
@@ -254,6 +294,36 @@ def int_paged_decode_attention_ref(q_q, k_pages, v_pages, sc, v_scale,
                                         window=window, bk=bk)
 
     return jax.vmap(one)(q_q, k, v, sc, vs, kpos, pos)
+
+
+def ragged_write_ref(pages, codes, lengths, page_table):
+    """Loop oracle for the ragged paged-prefill scatter (models.lm).
+
+    pages: (num_pages + 1, H, page_size, d) pool as stored (last page =
+    TRASH); codes: (B, H, S, d) already-quantized rows; lengths (B,);
+    page_table (B, max_pages) physical ids (negative = unallocated).  Row
+    b's position p < lengths[b] lands at
+    ``pages[page_table[b, p // ps], :, p % ps]``; pad and unallocated
+    positions land in the trash page.  Only non-trash pages are specified
+    (concurrent trash writes race, and the trash page is never read); the
+    oracle is exact when live page tables are disjoint — the allocator
+    invariant.
+    """
+    import numpy as np
+    out = np.array(pages)
+    b, _, s, _ = codes.shape
+    ps = out.shape[2]
+    trash = out.shape[0] - 1
+    pt = np.asarray(page_table)
+    codes_np = np.asarray(codes)
+    lens = np.asarray(lengths)
+    for i in range(b):
+        for p in range(s):
+            phys = pt[i, min(p // ps, pt.shape[1] - 1)]
+            if p >= lens[i] or phys < 0:
+                phys = trash
+            out[phys, :, p % ps] = codes_np[i, :, p]
+    return out
 
 
 def pq_layernorm_ref(x, gamma, beta, delta, *, bits=8, eps=1e-6,

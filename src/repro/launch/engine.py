@@ -33,12 +33,17 @@ Scheduling policy (deliberately simple, deterministic):
   ``ceil((prompt_len + max_new) / page_size)``.  All of those pages are
   reserved (allocated into the page table) at admission, so a running
   sequence can never starve mid-flight and admission never deadlocks.
-- Prefill-on-admit: the prompt runs through :func:`repro.models.lm.
-  paged_prefill` on a private batch=1 paged cache (prompt padded to a
-  fixed bucket so admission traces once per bucket), then every layer's
-  prompt pages are copied into the shared pools at the reserved physical
-  ids and the row's scales / recurrent states are installed.  Ragged
-  prompts therefore never pad the *decode* batch.
+  Prompts longer than the largest prefill bucket are REJECTED up front
+  (``Request.error`` records why) instead of crashing the serve loop.
+- Batched admission prefill: each ``step()`` first DRAINS every admittable
+  queued request, then runs ONE :func:`repro.models.lm.admission_prefill`
+  per prompt bucket — the admissions' KV codes land directly in the shared
+  page pools at their reserved physical ids (no private batch=1 cache, no
+  page-copy pass), so a burst of N same-bucket arrivals costs one prefill
+  instead of N and stalls running tenants once, not N times.  Trace count
+  stays bounded: one per (bucket, admission-batch-width).  Per-sequence
+  activation grids keep every admitted row bit-identical to its solo
+  prefill; ``prefill_calls`` counts the batched launches for tests/bench.
 - Per-sequence EOS: a row finishes on its own ``eos_id`` or
   ``max_new_tokens``; it is evicted immediately (pos := -1, pages back on
   the free list) and the next queued request can take the row that same
@@ -72,10 +77,15 @@ class Request:
     admitted_step: int = -1
     finished_step: int = -1
     decode_s: float = 0.0                 # wall time while this row decoded
+    error: Optional[str] = None           # set when the request is rejected
 
     @property
     def done(self) -> bool:
         return self.finished_step >= 0
+
+    @property
+    def failed(self) -> bool:
+        return self.error is not None
 
     @property
     def tok_per_s(self) -> float:
@@ -87,44 +97,6 @@ def _bucket(n: int, buckets) -> int:
         if n <= b:
             return b
     raise ValueError(f"prompt length {n} exceeds largest bucket {buckets}")
-
-
-def _copy_admitted(big, small, phys_targets, row):
-    """Install one prefilled batch=1 cache into the shared cache at ``row``.
-
-    Walks the two cache trees together: page pools copy the admission's
-    logical pages to the reserved physical ids (``phys_targets`` is padded
-    with the big cache's trash-page id, so pad-only pages scribble the
-    trash page and real pages land where the page table points);
-    per-sequence leaves (scales, recurrent states) copy into ``row``.
-    ``units`` subtrees carry a leading layer-stack axis.
-    """
-    def walk(b, s, stacked):
-        out = {}
-        for key, bleaf in b.items():
-            sleaf = s[key]
-            if isinstance(bleaf, dict):
-                out[key] = walk(bleaf, sleaf, stacked or key == "units")
-            elif key in ("k_pages", "v_pages"):
-                n = sleaf.shape[1 if stacked else 0] - 1   # skip small trash
-                if stacked:
-                    out[key] = bleaf.at[:, phys_targets].set(sleaf[:, :n])
-                else:
-                    out[key] = bleaf.at[phys_targets].set(sleaf[:n])
-            else:                                   # (B,)-leading per-row
-                if stacked:
-                    out[key] = bleaf.at[:, row].set(sleaf[:, 0])
-                else:
-                    out[key] = bleaf.at[row].set(sleaf[0])
-        return out
-
-    big = dict(big)
-    keep = {k: big.pop(k) for k in ("pos", "page_table")}   # host-owned
-    small = {k: v for k, v in small.items()
-             if k not in ("pos", "page_table")}
-    out = walk(big, small, False)
-    out.update(keep)
-    return out
 
 
 class PagedEngine:
@@ -151,19 +123,21 @@ class PagedEngine:
         self.row_pages: list[list[int]] = [[] for _ in range(batch_size)]
         self.next_tok = np.zeros((batch_size,), np.int32)
         self.queue: list[Request] = []
+        self.rejected: list[Request] = []
         self.step_count = 0
+        self.prefill_calls = 0            # batched admission-prefill launches
         self._dirty = True
 
         def step_fn(params, tok, cache):
             return lm.decode_step(params, tok, cache, cfg)
 
-        def prefill_fn(params, batch, cache):
-            return lm.paged_prefill(params, batch, cfg, cache)
+        def admit_fn(params, batch, cache, rows, page_table):
+            return lm.admission_prefill(params, batch, cfg, cache, rows,
+                                        page_table)
 
         self._step = jax.jit(step_fn)
-        self._prefill = jax.jit(prefill_fn)
-        self._admit_copy = jax.jit(_copy_admitted,
-                                   static_argnames=("row",))
+        # Retraces once per (bucket, admission-batch-width) shape pair.
+        self._admit_prefill = jax.jit(admit_fn)
 
     # -- allocator ---------------------------------------------------------
 
@@ -183,42 +157,79 @@ class PagedEngine:
     # -- admission ---------------------------------------------------------
 
     def _admit(self, req: Request, row: int):
-        plen = len(req.prompt)
-        bucket = _bucket(plen, self.prefill_buckets)
+        """Host-side admission: reserve the worst-case page count into the
+        row's table and claim the row.  The prompt itself prefills later,
+        batched with every other admission of this drain
+        (:meth:`_prefill_group`)."""
         need = self._pages_needed(req)
         pages = [self.free_pages.pop(0) for _ in range(need)]
         self.row_pages[row] = pages
         self.page_table[row] = -1
         self.page_table[row, :need] = pages
-        self.pos[row] = plen
-        self._dirty = True
-
-        # Private batch=1 prefill cache with an identity page table over
-        # its own (small) pool; its pages copy into the reserved physical
-        # ids afterwards.
-        small = lm.init_paged_cache(self.cfg, 1, bucket,
-                                    page_size=self.page_size)
-        small_pages = small["page_table"].shape[1]
-        small["page_table"] = jnp.arange(small_pages,
-                                         dtype=jnp.int32)[None, :]
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt
-        logits, small = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks),
-                          "lengths": jnp.asarray([plen], jnp.int32)}, small)
-        # Targets for the small cache's pages: real prompt pages to their
-        # reserved ids, pad-only pages to the trash page.
-        n_prompt_pages = -(-plen // self.page_size)
-        targets = np.full((small_pages,), self.num_pages, np.int32)
-        targets[:n_prompt_pages] = pages[:n_prompt_pages]
-        self.cache = self._admit_copy(self.cache, small,
-                                      jnp.asarray(targets), row=row)
-        first = int(jnp.argmax(logits[0, -1]))
-        self.next_tok[row] = first
+        self.pos[row] = len(req.prompt)
         self.row_req[row] = req
         req.admitted_step = self.step_count
-        req.tokens.append(first)
-        self._maybe_finish(row, first)
+        self._dirty = True
+
+    def _reject(self, req: Request):
+        req.error = (f"prompt length {len(req.prompt)} exceeds the largest "
+                     f"prefill bucket {self.prefill_buckets[-1]}")
+        req.finished_step = self.step_count
+        self.rejected.append(req)
+
+    def _drain_queue(self):
+        """Admit every admittable queued request, then run ONE batched
+        prefill per prompt bucket.
+
+        Over-length prompts (beyond the largest bucket — ``can_admit`` may
+        still say True because they fit the page pool) are rejected with a
+        recorded failure instead of crashing the serve loop.
+        """
+        admits = []
+        while self.queue:
+            req = self.queue[0]
+            if len(req.prompt) > self.prefill_buckets[-1]:
+                self.queue.pop(0)
+                self._reject(req)
+                continue
+            if not self.can_admit(req):
+                break
+            self.queue.pop(0)
+            row = self.row_req.index(None)
+            self._admit(req, row)
+            admits.append((req, row))
+        groups: dict[int, list] = {}
+        for req, row in admits:
+            b = _bucket(len(req.prompt), self.prefill_buckets)
+            groups.setdefault(b, []).append((req, row))
+        for bucket in sorted(groups):
+            self._prefill_group(bucket, groups[bucket])
+
+    def _prefill_group(self, bucket: int, group):
+        """One batched ragged admission prefill: W prompts of one bucket
+        land their KV codes directly in the shared pools at the reserved
+        physical pages (lm.admission_prefill) — no private batch=1 cache
+        and no page-copy pass."""
+        w = len(group)
+        toks = np.zeros((w, bucket), np.int32)
+        lens = np.zeros((w,), np.int32)
+        ptw = np.full((w, self.max_pages), -1, np.int32)
+        rows = np.zeros((w,), np.int32)
+        for j, (req, row) in enumerate(group):
+            toks[j, :len(req.prompt)] = req.prompt
+            lens[j] = len(req.prompt)
+            ptw[j] = self.page_table[row]
+            rows[j] = row
+        logits, self.cache = self._admit_prefill(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray(lens)},
+            self.cache, jnp.asarray(rows), jnp.asarray(ptw))
+        self.prefill_calls += 1
+        first = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        for j, (req, row) in enumerate(group):
+            self.next_tok[row] = first[j]
+            req.tokens.append(int(first[j]))
+            self._maybe_finish(row, int(first[j]))
 
     def _maybe_finish(self, row: int, tok: int):
         req = self.row_req[row]
@@ -248,13 +259,12 @@ class PagedEngine:
             self._dirty = False
 
     def step(self) -> bool:
-        """Admit what fits, decode one token for every active row.
+        """Drain admissions (one batched prefill per bucket), decode one
+        token for every active row.
 
         Returns False when there is nothing left to do.
         """
-        while self.queue and self.can_admit(self.queue[0]):
-            row = self.row_req.index(None)
-            self._admit(self.queue.pop(0), row)
+        self._drain_queue()
         active = [r for r, req in enumerate(self.row_req) if req is not None]
         if not active:
             if self.queue:

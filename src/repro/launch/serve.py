@@ -72,9 +72,12 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
                      "gen": len(r.tokens),
                      "admitted_step": r.admitted_step,
                      "finished_step": r.finished_step,
-                     "tok_per_s": r.tok_per_s} for r in reqs],
+                     "tok_per_s": r.tok_per_s,
+                     "error": r.error} for r in reqs],
         "engine_steps": engine.step_count,
-        "dispatch": dict(dispatch.STATS),
+        "prefill_calls": engine.prefill_calls,
+        "rejected": len(engine.rejected),
+        "dispatch": dispatch.snapshot(),
     }
 
 
@@ -131,13 +134,20 @@ def main(argv=None):
         return
     print(f"[serve:{args.mode}] total {stats['total_s']:.3f}s  "
           f"decode {stats['decode_s']:.3f}s  {stats['tok_per_s']:.1f} tok/s  "
-          f"steps {stats['engine_steps']}")
+          f"steps {stats['engine_steps']}  "
+          f"prefills {stats['prefill_calls']}  "
+          f"rejected {stats['rejected']}")
     for s in stats["per_seq"]:
+        tail = f"REJECTED: {s['error']}" if s["error"] else \
+            f"{s['tok_per_s']:.1f} tok/s"
         print(f"  [seq {s['rid']}] prompt {s['prompt_len']:4d}  "
               f"gen {s['gen']:3d}  admitted@{s['admitted_step']}  "
-              f"finished@{s['finished_step']}  {s['tok_per_s']:.1f} tok/s")
+              f"finished@{s['finished_step']}  {tail}")
     print("[dispatch] " + "  ".join(f"{k}={v}"
-                                    for k, v in stats["dispatch"].items()))
+                                    for k, v in stats["dispatch"].items()
+                                    if not isinstance(v, dict)))
+    for k, v in sorted(stats["dispatch"].get("blocks", {}).items()):
+        print(f"[blocks] {k} -> {v}")
     print("sample:", toks[0, :12].tolist())
 
 

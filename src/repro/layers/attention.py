@@ -18,9 +18,19 @@ Modes:
 
 The int path runs as XLA einsums by default; with the "pallas" kernel
 backend active (see :mod:`repro.kernels.dispatch`) supported shapes route
-to the fused single-pass Pallas kernel instead, which quantizes q/k/v once
-per tensor (the XLA path re-calibrates per query chunk when Sq > q_chunk —
-identical whenever one chunk covers the queries).
+to the fused single-pass Pallas kernel instead.  Activation grids are
+PER SEQUENCE on both backends — k/v per batch row, q per (batch row,
+query chunk) — and the kernel path matches the XLA chunked recalibration
+in ONE kernel call: dispatch threads a per-query-block scale matrix
+through the kernel's scalar-prefetch stream, so there is no chunked outer
+loop on the kernel path and no granularity gap at Sq > q_chunk.  One
+carve-out: the NARROW-window chunked path (window set, Sk > 2*window)
+slices keys per chunk below and quantizes each SLICE, while the kernel
+quantizes the full key row per sequence — backends there agree only to
+~one prob code (see test_windowed_dispatch_straddling_blocks_close), not
+bitwise.  Per-row grids are also what makes a batched ragged prefill
+bit-identical per row to running each prompt alone (the admission-prefill
+contract of :mod:`repro.launch.engine`).
 
 Serving KV-cache contract (in-place ring reads): decode callers hand k/v
 over as the cache stores them — int8-coded ``QTensor``s, or int4
@@ -89,6 +99,26 @@ def _as_q(x, bits):
     return quant.quantize_tensor(x, bits)
 
 
+def _as_q_rows(x, bits):
+    """Per-batch-row quantization (axis 0 keeps its own grid).
+
+    Serving isolation: every sequence of a batch calibrates its own
+    activation scale, so batched (ragged) prefill is bit-identical per row
+    to the solo run and one hot tenant cannot coarsen another's codes.
+    QTensors (KV-cache codes) pass through on their stored grid.
+    """
+    if isinstance(x, quant.QTensor):
+        return x
+    scale = quant.absmax_scale(x, bits, axis=tuple(range(1, x.ndim)))
+    return quant.quantize_tensor(x, bits, scale=scale)
+
+
+def _sc5(s):
+    """Broadcast a per-row (or scalar) scale over (B, Hkv, G, q, k) axes."""
+    s = jnp.asarray(s)
+    return s if s.ndim == 0 else s.reshape(s.shape[0], 1, 1, 1, 1)
+
+
 def _as_f(x, dtype):
     return x.dequant().astype(dtype) if isinstance(x, quant.QTensor) else x
 
@@ -104,12 +134,18 @@ def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
     mask = _mask(q_pos, k_pos, spec)                       # (bq, Sk)
 
     if mode == "int":
-        qq = _as_q(q, cfg.a_bits)
-        kq = _as_q(k, cfg.a_bits)
-        vq = _as_q(v, cfg.a_bits)
+        # Fresh float operands calibrate per batch row; cache-fed calls
+        # (QTensor k — the ring-decode XLA fallback) keep their per-tensor
+        # query grid, matching the Pallas ring-decode kernel bit for bit
+        # (the whole batch shares one ring cache and scale there).
+        fresh = not isinstance(k, quant.QTensor)
+        qq = _as_q_rows(q, cfg.a_bits) if fresh else _as_q(q, cfg.a_bits)
+        kq = _as_q_rows(k, cfg.a_bits)
+        vq = _as_q_rows(v, cfg.a_bits)
         acc = jnp.einsum("bhgqd,bhkd->bhgqk", qq.q, kq.q,
                          preferred_element_type=ACC_DTYPE)
-        x = acc.astype(jnp.float32) * (scale * LOG2E * qq.scale * kq.scale)
+        x = acc.astype(jnp.float32) * (scale * LOG2E * _sc5(qq.scale)
+                                       * _sc5(kq.scale))
         x = jnp.where(mask, x, NEG_BIG)
         x = jnp.maximum(x, -120.0)                          # keep 2^x in range
         m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))   # integer shift
@@ -130,7 +166,7 @@ def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
             ACC_DTYPE)
         pv = jnp.einsum("bhgqk,bhkd->bhgqd", p_q, vq.q,
                         preferred_element_type=ACC_DTYPE)
-        out = pv.astype(jnp.float32) * (dattn * vq.scale)
+        out = pv.astype(jnp.float32) * (dattn * _sc5(vq.scale))
         return out.astype(q.dtype)
 
     k = _as_f(k, q.dtype)
@@ -261,8 +297,11 @@ def attention(q, k, v, spec: AttnSpec, cfg: Optional[QuantConfig] = None, *,
         out = _row_attention(qg, k, v, q_pos, k_pos, spec, cfg)
         return out.reshape(b, hq, sq, d)
 
-    # Largest chunk <= q_chunk that divides sq (shapes are static).
-    bq = next(c for c in range(spec.q_chunk, 0, -1) if sq % c == 0)
+    # Largest chunk <= q_chunk that divides sq (shapes are static).  The
+    # ONE definition of this policy lives in dispatch.chunk_len: the
+    # kernel path's per-block q grids must match this chunking exactly.
+    from repro.kernels.dispatch import chunk_len
+    bq = chunk_len(sq, spec.q_chunk)
     spec = dataclasses.replace(spec, q_chunk=bq)
     n_chunks = sq // spec.q_chunk
     qs = qg.reshape(b, hkv, g, n_chunks, spec.q_chunk, d)

@@ -33,9 +33,13 @@ Ragged prefill (``batch["lengths"]``) writes each row's own pages and
 masks pad positions to the trash page; decode writes one row per sequence
 at its own ``pos[b]`` and attends through
 :func:`repro.layers.attention.paged_attention`, which streams only that
-sequence's live pages.  Page allocation/recycling policy lives in
-:mod:`repro.launch.engine` — this module only reads/writes what the page
-table names.
+sequence's live pages.  :func:`admission_prefill` batches W ragged
+admissions through ONE such prefill on a shared-pool view of the serving
+cache: codes land directly at the reserved physical pages (no private
+batch=1 cache, no page-copy pass) and, because every activation grid is
+per sequence, each admitted row is bit-identical to a solo prefill.  Page
+allocation/recycling policy lives in :mod:`repro.launch.engine` — this
+module only reads/writes what the page table names.
 """
 from __future__ import annotations
 
@@ -680,6 +684,87 @@ def paged_prefill(params, batch, cfg: LMConfig, cache):
         idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, x.shape[1] - 1)
         last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     return logits_fn(params, last, cfg), cache
+
+
+def _admission_view(cache, w: int, page_table):
+    """W-row prefill view over a B-row paged cache.
+
+    Page pools are SHARED (the view's writes land directly in the serving
+    cache's pools through ``page_table``); every per-row leaf (scales,
+    recurrent states, pos) is fresh — prefill overwrites them all before
+    anything reads them, so zeros suffice.  ``units`` subtrees carry a
+    leading layer-stack axis.
+    """
+    def walk(c, stacked):
+        out = {}
+        for key, leaf in c.items():
+            if isinstance(leaf, dict):
+                out[key] = walk(leaf, stacked or key == "units")
+            elif key in ("k_pages", "v_pages"):
+                out[key] = leaf
+            elif stacked:
+                out[key] = jnp.zeros((leaf.shape[0], w) + leaf.shape[2:],
+                                     leaf.dtype)
+            else:
+                out[key] = jnp.zeros((w,) + leaf.shape[1:], leaf.dtype)
+        return out
+
+    view = walk({k: v for k, v in cache.items()
+                 if k not in ("pos", "page_table")}, False)
+    view["pos"] = jnp.zeros((w,), jnp.int32)
+    view["page_table"] = jnp.asarray(page_table, jnp.int32)
+    return view
+
+
+def _install_rows(cache, view, rows):
+    """Scatter a W-row admission view into the B-row cache at ``rows``.
+
+    Pools replace wholesale (the view's prefill wrote only the admissions'
+    reserved pages plus the trash page, so running tenants' pages are
+    untouched); per-row leaves land in their target rows.  Host-owned
+    ``pos``/``page_table`` keep the big cache's values — the engine owns
+    and pushes them.
+    """
+    def walk(big, small, stacked):
+        out = {}
+        for key, bleaf in big.items():
+            if isinstance(bleaf, dict):
+                out[key] = walk(bleaf, small[key], stacked or key == "units")
+            elif key in ("k_pages", "v_pages"):
+                out[key] = small[key]
+            elif stacked:
+                out[key] = bleaf.at[:, rows].set(small[key])
+            else:
+                out[key] = bleaf.at[rows].set(small[key])
+        return out
+
+    host = {k: cache[k] for k in ("pos", "page_table")}
+    out = walk({k: v for k, v in cache.items() if k not in host},
+               {k: v for k, v in view.items() if k not in host}, False)
+    out.update(host)
+    return out
+
+
+def admission_prefill(params, batch, cfg: LMConfig, cache, rows, page_table):
+    """Batched ragged admission prefill straight into the shared page pools.
+
+    ``batch["tokens"]`` (W, S) right-padded to one bucket with
+    ``batch["lengths"]`` (W,); ``page_table`` (W, max_pages) holds each
+    admission's RESERVED physical page ids in ``cache``'s pools; ``rows``
+    (W,) int32 names the decode-batch rows the admissions occupy.  KV codes
+    are written through the page tables directly into the shared pools (pad
+    positions to the trash page) and per-row leaves (per-sequence scales,
+    recurrent states) land at ``rows`` — no private prefill cache and no
+    page-copy pass.  Per-sequence activation grids (core.api / dispatch /
+    layers.attention) make every row bit-identical to a solo prefill of the
+    same prompt at the same bucket, so a burst of W admissions costs ONE
+    forward instead of W without changing a single served token.  Returns
+    (last-real-position logits (W, 1, V), updated cache).
+    """
+    w = batch["tokens"].shape[0]
+    view = _admission_view(cache, w, page_table)
+    logits, view = paged_prefill(params, batch, cfg, view)
+    return logits, _install_rows(cache, view, jnp.asarray(rows, jnp.int32))
 
 
 def decode_step(params, token, cache, cfg: LMConfig):

@@ -85,6 +85,7 @@ def test_decode_single_block_matches_fullrow(span, pos, window):
     _rel_close(out, want)
 
 
+@pytest.mark.smoke
 def test_decode_int4_packed_in_place():
     """Nibble-packed ring == unpacked int8 ring, codes never leave uint8."""
     span, pos = 32, 70

@@ -179,6 +179,72 @@ def test_attention_fallback_policies(monkeypatch):
     _rel_close(out, base)
 
 
+@pytest.mark.parametrize("b,hq,hkv", [(1, 2, 2), (2, 4, 2)])
+def test_attention_parity_beyond_q_chunk_nonuniform_chunks(b, hq, hkv):
+    """Acceptance: at Sq > q_chunk with non-uniform per-chunk activation
+    ranges — the case the old per-tensor kernel scale papered over — the
+    fused kernel matches the XLA chunked-recalibration path at the house
+    parity tolerance (1e-5: integer codes and grids are identical, the
+    residual is f32 scale-product association between the kernel's
+    precomputed per-block scales and XLA's fused graph), while the old
+    per-tensor grid misses by >100x that."""
+    sq = sk = 64
+    d, q_chunk = 16, 16                            # 4 chunks per row
+    key = jax.random.PRNGKey(b + hq)
+    q = jax.random.normal(key, (b, hq, sq, d))
+    # chunk c of each row scaled by 2^c (8x spread): one per-tensor scale
+    # would coarsen chunk 0's codes by 3 bits and blow the tolerance.
+    # (Kept moderate: larger boosts push |logits| high enough that
+    # ulp(x) amplified through 2^x dominates — where the XLA path does
+    # not match ITSELF across jit/eager association either.)
+    boost = 2.0 ** (jnp.arange(sq) // q_chunk).astype(jnp.float32)
+    q = q * boost[None, None, :, None]
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, sk, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, sk, d))
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    spec = AttnSpec(causal=True, q_chunk=q_chunk)
+    a_xla = attention(q, k, v, spec, cfg)
+    dispatch.reset_stats()
+    with dispatch.use_backend("pallas"):
+        a_pal = attention(q, k, v, spec, cfg)
+    assert dispatch.STATS["attention_pallas"] == 1
+    _rel_close(a_pal, a_xla)
+    # The pre-PR-4 kernel grid (one per-tensor q scale for all chunks)
+    # really is the thing being fixed: reproduce it and show it misses.
+    from repro.core import quant
+    from repro.core.softmax2 import LOG2E
+    from repro.kernels.int_attention import int_attention_fused
+    g = hq // hkv
+    qq = quant.quantize_tensor(q, cfg.a_bits)
+    kq = quant.quantize_tensor(k, cfg.a_bits)
+    vq = quant.quantize_tensor(v, cfg.a_bits)
+    sc = (1.0 / d ** 0.5) * LOG2E * qq.scale * kq.scale
+    old = int_attention_fused(
+        qq.q.reshape(b, hkv, g, sq, d).reshape(b * hkv, g * sq, d),
+        kq.q.reshape(b * hkv, sk, d), vq.q.reshape(b * hkv, sk, d),
+        sc, vq.scale, attn_bits=cfg.attn_bits, bq=64, bk=128, sq_mod=sq)
+    old = old.reshape(b, hkv, g, sq, d).reshape(b, hq, sq, d)
+    err = np.abs(np.asarray(old) - np.asarray(a_xla)).max() \
+        / (np.abs(np.asarray(a_xla)).max() + 1e-9)
+    assert err > 1e-3, err
+
+
+def test_block_choices_recorded_in_stats():
+    """Satellite: every block-size decision lands in STATS['blocks'] (the
+    future TPU autotuner's baseline) and survives snapshot()."""
+    dispatch.reset_stats()
+    bq, bk = dispatch.attention_blocks(256, 512, 64, chunk=32)
+    assert 32 % bq == 0                            # tile within one chunk
+    bkd = dispatch.decode_blocks(200, 64)
+    psd = dispatch.paged_decode_blocks(128, 64)
+    blocks = dispatch.snapshot()["blocks"]
+    assert blocks["attention:sq256_sk512_d64_wNone_c32"] == [bq, bk]
+    assert blocks["decode:span200_d64"] == [bkd]
+    assert blocks["paged_decode:ps128_d64"] == [psd]
+    dispatch.reset_stats()
+    assert dispatch.STATS["blocks"] == {}
+
+
 def test_windowed_dispatch_narrow_window_long_keys():
     """Narrow local window over long keys now dispatches to Pallas (the
     static live-block map bounds the DMA); with every live key of a query
@@ -263,6 +329,7 @@ def test_vit_int_forward_config_backend():
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
+@pytest.mark.smoke
 def test_lm_prefill_and_decode_both_dispatch():
     """LM prefill (static zero offset) runs the fused kernel AND the
     ring-cache decode step runs the decode kernel — the full int serving
@@ -326,3 +393,33 @@ def test_kernel_bench_json(tmp_path):
     assert ploop["pallas"]["stats"]["attention_paged_pallas"] > 0
     assert ploop["xla"]["stats"]["attention_paged_pallas"] == 0
     assert ploop["xla"]["stats"]["attention_paged_xla"] > 0
+    # Block-size decisions recorded for the future autotuner baseline.
+    assert ploop["pallas"]["stats"]["blocks"]
+    # Admission burst: ONE batched prefill vs one per arrival, recorded
+    # under both backends.
+    adm = payload["paged"]["admission"]
+    for backend in ("xla", "pallas"):
+        assert adm[backend]["prefill_calls_burst"] == 1
+        assert adm[backend]["prefill_calls_serial"] == \
+            adm[backend]["requests"]
+        assert adm[backend]["burst_speedup"] > 0
+
+
+@pytest.mark.smoke
+def test_kernel_bench_check_guard(tmp_path):
+    """Satellite: --check exits cleanly against a faithful analytic dump
+    and nonzero when the previous dump beats the current analytics (i.e.,
+    bytes/step or MACs regressed).  Timer-free, so it rides the smoke
+    subset."""
+    import json
+
+    from benchmarks import kernel_bench
+    good = tmp_path / "prev.json"
+    good.write_text(json.dumps(kernel_bench.analytic_payload()))
+    assert kernel_bench.main(["--check", str(good)]) is None
+    tampered = json.loads(good.read_text())
+    tampered["decode"]["analytic"][0]["pallas_bytes_per_step"] -= 1
+    bad = tmp_path / "tampered.json"
+    bad.write_text(json.dumps(tampered))
+    with pytest.raises(SystemExit):
+        kernel_bench.main(["--check", str(bad)])

@@ -138,6 +138,61 @@ def test_engine_rejects_request_exceeding_max_len():
     assert len(eng.free_pages) == eng.num_pages  # nothing leaked
 
 
+@pytest.mark.smoke
+def test_burst_admissions_single_prefill_call():
+    """Acceptance: a burst of N same-bucket admissions triggers exactly
+    ONE batched admission prefill (one jit trace), ``_admit_copy`` is gone
+    (codes land in the shared pools directly), and every served token is
+    bit-identical to the same requests arriving one at a time — the PR-3
+    cost model, now N prefills only when arrivals really are serial."""
+    cfg, params = _setup()
+    n = 4
+    prompts = _prompts([7, 12, 5, 9], seed=8)
+    kw = dict(batch_size=n, max_len=64, page_size=8, prefill_buckets=(16,))
+
+    burst = PagedEngine(cfg, params, **kw)
+    assert not hasattr(burst, "_admit_copy")
+    burst_reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+                  for i, p in enumerate(prompts)]
+    for r in burst_reqs:
+        burst.submit(r)
+    burst.run()
+    assert burst.prefill_calls == 1
+    assert burst._admit_prefill._cache_size() == 1   # one (bucket, W) trace
+
+    drip = PagedEngine(cfg, params, **kw)
+    drip_reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+                 for i, p in enumerate(prompts)]
+    for r in drip_reqs:                  # one arrival per drain: N prefills
+        drip.submit(r)
+        drip.step()
+    while drip.step():
+        pass
+    assert drip.prefill_calls == n
+    for a, b in zip(burst_reqs, drip_reqs):
+        assert a.tokens == b.tokens, (a.rid, a.tokens, b.tokens)
+
+
+def test_engine_rejects_overlong_prompt_gracefully():
+    """Satellite: a prompt beyond the largest bucket — which can_admit
+    approves, because it fits the page pool — must be rejected with a
+    recorded failure instead of crashing the serve loop, and neighbours
+    keep serving exactly as if it never arrived."""
+    cfg, params = _setup()
+    kw = dict(batch_size=2, max_len=64, page_size=8, prefill_buckets=(16,))
+    eng = PagedEngine(cfg, params, **kw)
+    bad = Request(rid=0, prompt=_prompts([40], seed=10)[0], max_new_tokens=3)
+    good = Request(rid=1, prompt=_prompts([10], seed=9)[0], max_new_tokens=3)
+    assert eng.can_admit(bad)                 # the pre-PR-4 crash case
+    eng.run([bad, good])
+    assert bad.failed and bad.done and bad.tokens == []
+    assert "bucket" in bad.error
+    assert eng.rejected == [bad]
+    assert not good.failed
+    solo = _run_solo(cfg, params, good.prompt, 3, **kw)
+    assert good.tokens == solo
+
+
 def test_engine_runs_paged_kernel_under_pallas():
     """The fixed-shape step traces onto the Pallas paged kernel (STATS),
     and tokens match the XLA backend run exactly."""
@@ -160,6 +215,7 @@ def test_engine_runs_paged_kernel_under_pallas():
     assert toks_p == toks_x
 
 
+@pytest.mark.smoke
 def test_serve_json_reports_paged_dispatch(capsys):
     """Tier-1 CI smoke: the serve CLI's --json output carries the dispatch
     STATS with attention_paged_pallas > 0 under --backend pallas."""

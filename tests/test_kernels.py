@@ -43,6 +43,7 @@ def test_qmatmul_out_dtypes(out_dtype):
     assert out.dtype == out_dtype
 
 
+@pytest.mark.smoke
 def test_qmatmul_int4_packed_matches_unpacked():
     key = jax.random.PRNGKey(7)
     x = _rand_int8(key, (64, 128))
@@ -130,6 +131,7 @@ def test_fused_coarse_vs_fullrow_ref_multiblock():
     assert corr > 0.999
 
 
+@pytest.mark.smoke
 def test_fused_gqa_folding_sq_mod():
     """G query groups stacked along Sq wrap positions modulo sq_mod."""
     h, g, sq, sk, d = 2, 3, 32, 64, 32
@@ -144,6 +146,58 @@ def test_fused_gqa_folding_sq_mod():
     scale = float(jnp.max(jnp.abs(want))) + 1e-9
     np.testing.assert_allclose(np.asarray(out) / scale,
                                np.asarray(want) / scale, atol=1e-5)
+
+
+def _expand_block_scales(sc_blocks, bq, sq):
+    """(h, nq) per-q-block scales -> the oracle's (h, sq) per-row form."""
+    return np.repeat(np.asarray(sc_blocks), bq, axis=1)[:, :sq]
+
+
+@pytest.mark.parametrize("h,sq,sk,d,causal,window", [
+    (2, 128, 128, 64, True, None),
+    (1, 128, 384, 128, True, 128),       # local window
+    (2, 96, 200, 32, False, None),       # cross, ragged keys
+])
+def test_fused_per_block_scales_match_fullrow_ref(h, sq, sk, d, causal,
+                                                  window):
+    """Acceptance: per-block scales bit-match the per-row oracle grid.
+
+    Each bq-tile carries its OWN logit scale (non-uniform by 16x across
+    blocks — the case one per-tensor scale papers over); with one key
+    block covering the row the kernel's grid is the full-row oracle's."""
+    q, k, v = _qkv(h, sq, sk, d)
+    bq = 32
+    nq = sq // bq
+    key = jax.random.PRNGKey(nq)
+    sc_blocks = 0.002 * 2.0 ** jax.random.randint(key, (h, nq), -2, 3) \
+        .astype(jnp.float32)                       # 16x spread across tiles
+    vs = 0.01 + 0.002 * jnp.arange(h, dtype=jnp.float32)
+    bk = -(-sk // 128) * 128
+    out = int_attention_fused(q, k, v, sc_blocks, vs, causal=causal,
+                              window=window, bq=bq, bk=bk)
+    sc_rows = _expand_block_scales(sc_blocks, bq, sq)
+    want = ref.int_attention_ref(q, k, v, sc_rows, vs, causal=causal,
+                                 window=window)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    np.testing.assert_allclose(np.asarray(out) / scale,
+                               np.asarray(want) / scale, atol=1e-6)
+
+
+def test_per_block_scales_streamed_and_two_pass():
+    """Streaming key blocks with per-block q scales: fused == two-pass ==
+    streamed oracle on the same running-m grid (1-D (nq,) form shared
+    across heads also accepted)."""
+    h, sq, sk, d, bq, bk = 2, 64, 256, 32, 32, 64
+    q, k, v = _qkv(h, sq, sk, d)
+    sc_blocks = jnp.asarray([0.001, 0.004], jnp.float32)       # (nq,)
+    sc_rows = np.repeat(np.asarray(sc_blocks)[None, :], h, 0)
+    sc_rows = _expand_block_scales(sc_rows, bq, sq)
+    want = ref.int_attention_ref_streamed(q, k, v, sc_rows, 0.01, bk=bk)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    for kern in (int_attention_fused, int_attention):
+        out = kern(q, k, v, sc_blocks, 0.01, bq=bq, bk=bk)
+        np.testing.assert_allclose(np.asarray(out) / scale,
+                                   np.asarray(want) / scale, atol=1e-6)
 
 
 @pytest.mark.parametrize("attn_bits", [2, 3, 7, 8])

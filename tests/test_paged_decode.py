@@ -140,6 +140,7 @@ def test_paged_batch_rows_bit_identical_to_solo():
                                           np.asarray(batch[i]))
 
 
+@pytest.mark.smoke
 def test_paged_attention_backend_bit_parity():
     """paged_attention: Pallas kernel == XLA gather fallback, bitwise —
     both run the page-streamed grid on per-row scales."""
@@ -265,6 +266,96 @@ def test_paged_lm_ragged_decode_dispatches_and_tracks_xla(kv_bits):
     if kv_bits == 4:
         leaf = cx["units"]["b0"]["k_pages"]
         assert leaf.dtype == jnp.uint8          # packed pages stay packed
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_batched_ragged_prefill_bitwise_matches_solo(backend):
+    """Acceptance: each row of a W-row ragged admission prefill is
+    BIT-identical — logits, written pages, per-sequence scales — no matter
+    what the OTHER rows carry: per-row activation grids (dense + attention
+    q/k/v) make rows fully separable, so a batched admission serves every
+    tenant exactly as if it were alone.  (Isolation is asserted at fixed
+    batch width: XLA retiles f32 reductions per array shape, so raw logits
+    across different widths differ by ~1 ulp — served tokens stay
+    bit-identical across widths, which tests/test_engine.py asserts.)"""
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=8, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    w, bucket, ps = 3, 16, 4
+    rng = np.random.RandomState(3)
+    lens = [16, 9, 3]
+    toks = np.zeros((w, bucket), np.int32)
+    for i, n in enumerate(lens):
+        toks[i, :n] = rng.randint(0, cfg.vocab, n)
+    cache = lm.init_paged_cache(cfg, w, 32, page_size=ps)
+    maxp = cache["page_table"].shape[1]
+    pt = np.arange(w * maxp, dtype=np.int32).reshape(w, maxp)  # disjoint
+    with dispatch.use_backend(backend):
+        blog, bcache = lm.admission_prefill(
+            params, {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray(lens, jnp.int32)},
+            cfg, cache, jnp.arange(w), jnp.asarray(pt))
+        for i in range(w):
+            # Same width, every OTHER row swapped for a different ragged
+            # prompt: row i must not notice.
+            toks2 = np.zeros((w, bucket), np.int32)
+            lens2 = [0] * w
+            for j in range(w):
+                if j == i:
+                    toks2[j], lens2[j] = toks[j], lens[j]
+                else:
+                    n = int(rng.randint(1, bucket + 1))
+                    toks2[j, :n] = rng.randint(0, cfg.vocab, n)
+                    lens2[j] = n
+            other = lm.init_paged_cache(cfg, w, 32, page_size=ps)
+            olog, ocache = lm.admission_prefill(
+                params, {"tokens": jnp.asarray(toks2),
+                         "lengths": jnp.asarray(lens2, jnp.int32)},
+                cfg, other, jnp.arange(w), jnp.asarray(pt))
+            np.testing.assert_array_equal(np.asarray(olog[i]),
+                                          np.asarray(blog[i]))
+            own = pt[i, :-(-lens[i] // ps)]        # the row's prompt pages
+            for leaf in ("k_pages", "v_pages"):
+                np.testing.assert_array_equal(
+                    np.asarray(bcache["units"]["b0"][leaf])[:, own],
+                    np.asarray(ocache["units"]["b0"][leaf])[:, own])
+            for leaf in ("k_scale", "v_scale"):
+                np.testing.assert_array_equal(
+                    np.asarray(bcache["units"]["b0"][leaf])[:, i],
+                    np.asarray(ocache["units"]["b0"][leaf])[:, i])
+
+
+def test_paged_write_prefill_matches_ragged_write_oracle():
+    """The ragged pool scatter (valid-masked codes, trash-page padding,
+    unallocated entries) matches ref.ragged_write_ref on every non-trash
+    page."""
+    from repro.models.lm import _paged_write_prefill
+    b, hkv, s, d, ps, npg = 2, 2, 10, 8, 4, 7
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (b, hkv, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, s, d))
+    lengths = jnp.asarray([10, 6], jnp.int32)
+    pt = jnp.asarray([[0, 1, 2], [4, 5, -1]], jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache = {"k_pages": jnp.zeros((npg + 1, hkv, ps, d), jnp.int8),
+             "v_pages": jnp.zeros((npg + 1, hkv, ps, d), jnp.int8),
+             "k_scale": jnp.ones((b,)), "v_scale": jnp.ones((b,))}
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=8, mode="int")
+    new = _paged_write_prefill(cache, k, v, positions, lengths, pt, "int",
+                               qc)
+    for tensor, pages, scale in ((k, "k_pages", "k_scale"),
+                                 (v, "v_pages", "v_scale")):
+        sc = np.asarray(new[scale])
+        codes = np.clip(np.round(np.asarray(tensor)
+                                 / sc[:, None, None, None]),
+                        -128, 127).astype(np.int8)
+        want = ref.ragged_write_ref(np.zeros((npg + 1, hkv, ps, d), np.int8),
+                                    codes, np.asarray(lengths), pt)
+        np.testing.assert_array_equal(np.asarray(new[pages])[:npg],
+                                      want[:npg])
 
 
 def test_paged_cache_per_sequence_scales():
