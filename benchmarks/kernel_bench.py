@@ -59,6 +59,12 @@ PAGED_SHAPES = [
     (8, 4, 128, [127, 1023, 8191], 128, 4),
     (8, 4, 256, [255, 255, 255, 16383], 128, 8),
 ]
+# (n_requests, prefix_tokens, tail_tokens, page_size, hkv, d, kv_bits)
+PREFIX_SHAPES = [
+    (8, 2048, 128, 128, 8, 128, 8),      # system-prompt-heavy chat traffic
+    (8, 2048, 128, 128, 8, 128, 4),
+    (32, 8192, 256, 128, 8, 128, 8),     # long shared context, many tenants
+]
 
 
 def _time(f, *args, n=20):
@@ -167,6 +173,39 @@ def paged_step_analytic(h, g, page_size, pos_list, d, kv_bits):
     }
 
 
+def prefix_burst_analytic(n, prefix, tail, page_size, hkv, d, kv_bits):
+    """N same-prefix admissions, shared vs unshared: prefill token work,
+    KV bytes written into the pool (per attention layer) and pool pages
+    consumed.
+
+    Unshared, every request prefills prefix + tail and owns all its pages;
+    with prefix sharing the prefix prefills ONCE into ``ceil(prefix/ps)``
+    refcounted pages that all N page tables alias, so prefill work drops
+    to ``prefix + n * tail`` tokens and the pool holds ``(n - 1) * P``
+    more tenants' worth of pages.  (Worst case — a non-page-aligned
+    breakpoint — adds one CoW page copy per sharer; the aligned numbers
+    here are the guarded lower bound.)
+    """
+    unit = kv_bits / 8
+    p_pages = -(-prefix // page_size)
+    t_pages = -(-tail // page_size)
+    page_bytes = 2 * hkv * page_size * d * unit          # K + V, one layer
+    unshared_pages = n * (p_pages + t_pages)
+    shared_pages = p_pages + n * t_pages
+    return {
+        "n": n, "prefix": prefix, "tail": tail, "page_size": page_size,
+        "hkv": hkv, "d": d, "kv_bits": kv_bits,
+        "unshared_prefill_tokens": n * (prefix + tail),
+        "shared_prefill_tokens": prefix + n * tail,
+        "unshared_pages_consumed": unshared_pages,
+        "shared_pages_consumed": shared_pages,
+        "unshared_kv_bytes_written": int(unshared_pages * page_bytes),
+        "shared_kv_bytes_written": int(shared_pages * page_bytes),
+        "pages_saved": unshared_pages - shared_pages,
+        "admission_capacity_gain": unshared_pages / max(shared_pages, 1),
+    }
+
+
 def _bench_lm():
     """One smoke LM + integerized params shared by the timed loops."""
     from repro.core.api import QuantConfig, integerize_params
@@ -249,6 +288,76 @@ def admission_burst(quick=False):
                 "prefill_calls_burst": burst.prefill_calls,
                 "prefill_calls_serial": serial.prefill_calls,
             }
+    return res
+
+
+def prefix_burst(quick=False):
+    """Timed N same-prefix admission drain: shared vs unshared.
+
+    N requests carrying one system prompt, either declaring it as a cache
+    breakpoint (``Request.prefix_len`` — 1 prefix prefill + 1 batched tail
+    prefill, prefix pages aliased refcounted) or not (the PR-4 path: one
+    batched full prefill, every request owning private prefix pages).
+    Wall-clocks are relative CPU numbers; the counters (prefill calls,
+    prefix prefills, pool pages in use) and the analytic section above
+    carry the real story.  Jits are pre-warmed so drains compare work, not
+    compile time.
+    """
+    import numpy as np
+
+    from repro.kernels import dispatch
+    from repro.launch.engine import PagedEngine, Request
+
+    cfg, params = _bench_lm()
+    n = 2 if quick else 4
+    ps, plen = 8, 16
+    rng = np.random.RandomState(0)
+    prefix = rng.randint(0, cfg.vocab, plen).astype(np.int32)
+    tails = [rng.randint(0, cfg.vocab, 6).astype(np.int32) for _ in range(n)]
+
+    def engine(share_from=None):
+        eng = PagedEngine(cfg, params, batch_size=n, max_len=48,
+                          page_size=ps, prefill_buckets=(16, 32))
+        if share_from is not None:
+            eng._step = share_from._step
+            eng._admit_prefill = share_from._admit_prefill
+        return eng
+
+    def reqs(shared):
+        # max_new 2: rows stay admitted after the drain (a 1-token request
+        # finishes AT prefill), so pages_in_use reflects real occupancy
+        return [Request(rid=i, prompt=np.concatenate([prefix, t]),
+                        max_new_tokens=2,
+                        prefix_len=plen if shared else 0)
+                for i, t in enumerate(tails)]
+
+    res = {}
+    for backend in ("xla", "pallas"):
+        with dispatch.use_backend(backend):
+            warm = engine()
+            warm.run(reqs(True))                 # compile prefix+tail traces
+            warm2 = engine(warm)
+            warm2.run(reqs(False))               # compile the unshared trace
+
+            out = {}
+            for mode, shared in (("shared", True), ("unshared", False)):
+                eng = engine(warm)
+                for r in reqs(shared):
+                    eng.submit(r)
+                t0 = time.perf_counter()
+                eng._drain_queue()
+                jax.block_until_ready(eng.cache)
+                out[mode] = {
+                    "drain_s": time.perf_counter() - t0,
+                    "prefill_calls": eng.prefill_calls,
+                    "prefix_prefills": eng.prefix_prefills,
+                    "pages_in_use": eng.num_pages - eng.alloc.free_count,
+                }
+            out["requests"] = n
+            out["prefix_tokens"] = plen
+            out["pages_saved"] = (out["unshared"]["pages_in_use"]
+                                  - out["shared"]["pages_in_use"])
+            res[backend] = out
     return res
 
 
@@ -374,11 +483,18 @@ def run(quick=False):
     }
 
     # Paged multi-tenant decode: per-sequence pages vs the batch-max ring;
-    # admission: batched burst prefill vs one-at-a-time.
+    # admission: batched burst prefill vs one-at-a-time; prefix: N
+    # same-prefix admissions shared (1 prefix prefill, aliased pages) vs
+    # unshared.
     paged = {
         "analytic": [paged_step_analytic(*sh) for sh in PAGED_SHAPES],
         "loop": paged_loop(quick=quick),
         "admission": admission_burst(quick=quick),
+        "prefix": {
+            "analytic": [prefix_burst_analytic(*sh)
+                         for sh in PREFIX_SHAPES],
+            "burst": prefix_burst(quick=quick),
+        },
     }
     return rows, design, decode, paged
 
@@ -392,6 +508,8 @@ GUARDED_DESIGN = ("single_pass_macs", "single_pass_kv_hbm_bytes")
 GUARDED_DECODE = ("pallas_bytes_per_step", "pallas_bytes_per_step_wrapped",
                   "decode_macs_per_step")
 GUARDED_PAGED = ("paged_bytes_per_step", "paged_macs_per_step")
+GUARDED_PREFIX = ("shared_prefill_tokens", "shared_pages_consumed",
+                  "shared_kv_bytes_written")
 
 
 def analytic_payload():
@@ -401,7 +519,9 @@ def analytic_payload():
         "decode": {"analytic": [decode_step_analytic(*sh)
                                 for sh in DECODE_SHAPES]},
         "paged": {"analytic": [paged_step_analytic(*sh)
-                               for sh in PAGED_SHAPES]},
+                               for sh in PAGED_SHAPES],
+                  "prefix": {"analytic": [prefix_burst_analytic(*sh)
+                                          for sh in PREFIX_SHAPES]}},
     }
 
 
@@ -436,6 +556,15 @@ def check_regressions(cur, prev):
         for k in GUARDED_PAGED:
             if old and e[k] > old[k]:
                 regs.append(f"paged[ps={e['page_size']},pos={e['pos']}]."
+                            f"{k}: {old[k]} -> {e[k]}")
+    xkey = ("n", "prefix", "tail", "page_size", "kv_bits")
+    prev_x = by_key(prev.get("paged", {}).get("prefix", {})
+                    .get("analytic", []), xkey)
+    for e in cur["paged"]["prefix"]["analytic"]:
+        old = prev_x.get(tuple(str(e[f]) for f in xkey))
+        for k in GUARDED_PREFIX:
+            if old and e[k] > old[k]:
+                regs.append(f"prefix[n={e['n']},prefix={e['prefix']}]."
                             f"{k}: {old[k]} -> {e[k]}")
     return regs
 
@@ -506,6 +635,21 @@ def main(argv=None):
               f"speedup={r['burst_speedup']:.2f}x,"
               f"prefills={r['prefill_calls_burst']}"
               f"/{r['prefill_calls_serial']}")
+    for a in paged["prefix"]["analytic"]:
+        print(f"prefix_burst,n={a['n']},prefix={a['prefix']},"
+              f"tail={a['tail']},kv_bits={a['kv_bits']},"
+              f"shared_tokens={a['shared_prefill_tokens']},"
+              f"unshared_tokens={a['unshared_prefill_tokens']},"
+              f"pages_saved={a['pages_saved']},"
+              f"capacity_gain={a['admission_capacity_gain']:.2f}x")
+    for backend, r in paged["prefix"]["burst"].items():
+        print(f"prefix_burst[{backend}],n={r['requests']},"
+              f"shared={r['shared']['drain_s'] * 1e3:.1f}ms"
+              f"(prefix_prefills={r['shared']['prefix_prefills']},"
+              f"pages={r['shared']['pages_in_use']}),"
+              f"unshared={r['unshared']['drain_s'] * 1e3:.1f}ms"
+              f"(pages={r['unshared']['pages_in_use']}),"
+              f"pages_saved={r['pages_saved']}")
 
     if args.json:
         payload = {"kernels": rows, "attention_design": design,

@@ -36,7 +36,10 @@ Paged decode (continuous batching) routes through
 :func:`~repro.kernels.int_attention.int_paged_decode_attention`: shared
 page pools + per-sequence page tables/positions/scales, with per-step DMA
 bounded by each sequence's own live pages (``attention_paged_pallas``
-STATS).  The XLA fallback (``attention_paged_xla``) gathers pages as
+STATS).  With per-PHYSICAL-page scale pools (prefix sharing), the kernel
+call carries them as extra operands riding the ``_paged_meta`` phys-id
+stream, so a page shared from a prefix owner dequantizes on the OWNER's
+grid.  The XLA fallback (``attention_paged_xla``) gathers pages as
 *codes* — int8, or nibbles unpacked to int8 — never as floats.
 
 ``REPRO_PALLAS_COMPILED=1`` runs the kernels compiled on a real TPU;
@@ -89,6 +92,10 @@ STATS = {"qlinear_pallas": 0, "qlinear_xla": 0,
          "attention_pallas": 0, "attention_decode_pallas": 0,
          "attention_paged_pallas": 0, "attention_paged_xla": 0,
          "attention_xla": 0,
+         # prefix-sharing copy-on-write page copies (bumped by the engine's
+         # allocator on the first divergent write into a shared partial
+         # page — one copy per sharer, ever)
+         "cow_page_copies": 0,
          # chosen tile sizes per (op, shape) — the baseline the future
          # measured autotuner (ROADMAP) diffs against; serialized by
          # kernel_bench --json and the serve CLI report.
@@ -526,19 +533,38 @@ def quantize_rows(x, bits):
     return quant.quantize(x, scale, bits), scale.reshape(x.shape[0])
 
 
-def paged_query_grid(q, spec, cfg, k_scale):
+def paged_query_grid(q, spec, cfg, k_scale=None):
     """Per-sequence query codes + folded per-row softmax scale.
 
     The ONE place the paged decode grid is derived: both the Pallas call
     below and the XLA gather fallback in ``layers.attention`` consume this,
     so the emitted prob codes are bit-identical across backends by
-    construction.
+    construction.  ``k_scale=None`` leaves the key dequantization step OUT
+    of the fold — the per-PHYSICAL-page scale path (prefix sharing), where
+    the kernel/oracle resolve each page's own grid instead.
     """
     qq, qscale = quantize_rows(q, cfg.a_bits)
     scale = spec.softmax_scale or (1.0 / q.shape[-1] ** 0.5)
-    sc = scale * LOG2E * qscale.astype(jnp.float32) * \
-        jnp.asarray(k_scale, jnp.float32).reshape(-1)
+    sc = scale * LOG2E * qscale.astype(jnp.float32)
+    if k_scale is not None:
+        sc = sc * jnp.asarray(k_scale, jnp.float32).reshape(-1)
     return qq, sc
+
+
+def paged_read_grid(q, spec, cfg, k_scale, v_scale, page_scaled: bool):
+    """(query codes, per-row logit scale, per-row v scale) for a paged read.
+
+    The one derivation BOTH backends share for both scale layouts: with
+    per-page scale pools the k/v steps stay out of the per-row fold (the
+    kernel/oracle resolve each page's own grid; the per-row v factor
+    becomes 1), otherwise the per-sequence ``k_scale`` folds into the
+    logit scale exactly as before.
+    """
+    if page_scaled:
+        qq, sc = paged_query_grid(q, spec, cfg)
+        return qq, sc, jnp.ones((q.shape[0],), jnp.float32)
+    qq, sc = paged_query_grid(q, spec, cfg, k_scale)
+    return qq, sc, v_scale
 
 
 def paged_decode_supported(q, k_pages, spec, cfg, page_table, pos) -> bool:
@@ -566,31 +592,40 @@ def paged_decode_supported(q, k_pages, spec, cfg, page_table, pos) -> bool:
 
 
 def maybe_paged_attention(q, k_pages, v_pages, k_scale, v_scale, spec, cfg,
-                          *, page_table, pos):
+                          *, page_table, pos, k_page_scale=None,
+                          v_page_scale=None):
     """Pallas-backed paged decode; ``None`` -> caller's XLA gather path."""
     if resolve_backend(cfg) == "pallas" and \
             paged_decode_supported(q, k_pages, spec, cfg, page_table, pos):
         STATS["attention_paged_pallas"] += 1
         return _paged_call(q, k_pages, v_pages, k_scale, v_scale, spec, cfg,
-                           page_table, pos)
+                           page_table, pos, k_page_scale, v_page_scale)
     STATS["attention_paged_xla"] += 1
     return None
 
 
 def _paged_call(q, k_pages, v_pages, k_scale, v_scale, spec, cfg,
-                page_table, pos):
+                page_table, pos, k_page_scale=None, v_page_scale=None):
     """One continuous-batching decode step on the paged kernel.
 
     The page pools go to the kernel exactly as stored (int8 codes or int4
     nibbles) and each sequence's scales stay its own: the per-row softmax
     scale folds ``dq[b] * dk[b]`` so no tenant's grid leaks into another's.
+    With per-PHYSICAL-page scale pools (``k_page_scale``/``v_page_scale``,
+    the prefix-sharing layout) the kernel resolves each page's own stored
+    grid instead — a page shared from a prefix owner dequantizes with the
+    OWNER's scales, never the reading tenant's — and only ``dq[b]`` folds
+    into the per-row logit scale.
     """
     b, hq, _, d = q.shape
     hkv = k_pages.shape[1]
     g = hq // hkv
-    qq, sc = paged_query_grid(q, spec, cfg, k_scale)
+    qq, sc, vs = paged_read_grid(q, spec, cfg, k_scale, v_scale,
+                                 k_page_scale is not None)
     out = int_paged_decode_attention(
-        qq.reshape(b, hkv, g, d), k_pages, v_pages, sc, v_scale,
-        page_table, pos, attn_bits=cfg.attn_bits, window=spec.window,
-        packed=k_pages.dtype == jnp.uint8, interpret=interpret_default())
+        qq.reshape(b, hkv, g, d), k_pages, v_pages, sc, vs,
+        page_table, pos, k_page_scale=k_page_scale,
+        v_page_scale=v_page_scale, attn_bits=cfg.attn_bits,
+        window=spec.window, packed=k_pages.dtype == jnp.uint8,
+        interpret=interpret_default())
     return out.reshape(b, hq, 1, d).astype(q.dtype)

@@ -51,7 +51,10 @@ Three kernels share that quantizer:
   step reads exactly the pages holding that sequence's live keys — never
   the batch-max span, never another tenant's pages.  Key positions need no
   stored map: logical page ``l`` holds positions ``l*page_size + r``.
-  Scales are per-sequence ``(B,)`` vectors (multi-tenant isolation).
+  Scales are per-sequence ``(B,)`` vectors (multi-tenant isolation) —
+  optionally joined by per-PHYSICAL-page ``k_page_scale``/``v_page_scale``
+  pools riding the same phys-id stream, so pages shared across sequences
+  (prefix sharing / CoW) dequantize on the grid they were prefilled with.
 
 Skipping a fully-masked key block is bit-exact: it contributes ``e = 0``
 to every carry and cannot raise the running ``m`` — which is why both block
@@ -360,8 +363,8 @@ def _decode_kernel(meta_ref, q_ref, k_ref, v_ref, kp_ref, sc_ref, vs_ref,
 
 
 def _paged_decode_kernel(meta_ref, q_ref, k_ref, v_ref, sc_ref, vs_ref,
-                         o_ref, mb_ref, sb_ref, acc_ref, *, nt, page_size,
-                         window, qmax, packed):
+                         kps_ref, vps_ref, o_ref, mb_ref, sb_ref, acc_ref, *,
+                         nt, page_size, window, qmax, packed, page_scaled):
     b, t = pl.program_id(0), pl.program_id(2)
 
     @pl.when(t == 0)
@@ -388,17 +391,31 @@ def _paged_decode_kernel(meta_ref, q_ref, k_ref, v_ref, sc_ref, vs_ref,
         k = _unpack_nibbles(k_ref[0, 0]) if packed else k_ref[0, 0]
         v = _unpack_nibbles(v_ref[0, 0]) if packed else v_ref[0, 0]
         acc = jnp.dot(q_ref[0, 0], k.T, preferred_element_type=jnp.int32)
-        x = acc.astype(jnp.float32) * sc_ref[0, 0]
+        # page_scaled: this page's codes dequantize on the grid they were
+        # PREFILLED with (prefix-sharing: the prefix owner's scale, read
+        # per physical page through the meta's phys-id stream), so shared
+        # pages never re-scale to the reading tenant's grid.
+        if page_scaled:
+            x = acc.astype(jnp.float32) * (sc_ref[0, 0] * kps_ref[0, 0])
+        else:
+            x = acc.astype(jnp.float32) * sc_ref[0, 0]
         x = jnp.maximum(jnp.where(valid, x, NEG), -120.0)
         e, p_q, r = _online_update(x, mb_ref, qmax)
         pv = _pv_dot(p_q, v, qmax)
         sb_ref[...] = sb_ref[...] * r + jnp.sum(e, axis=-1)
-        acc_ref[...] = acc_ref[...] * r[:, None] + pv.astype(jnp.float32)
+        if page_scaled:
+            pv_f = pv.astype(jnp.float32) * (vs_ref[0, 0] * vps_ref[0, 0])
+        else:
+            pv_f = pv.astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * r[:, None] + pv_f
 
     @pl.when(t == nt - 1)
     def _out():
         s = jnp.maximum(sb_ref[...], 1e-30)[:, None]
-        o_ref[0, 0] = acc_ref[...] * ((2.0 / qmax) / s * vs_ref[0, 0])
+        if page_scaled:                   # dv folded per block above
+            o_ref[0, 0] = acc_ref[...] * ((2.0 / qmax) / s)
+        else:
+            o_ref[0, 0] = acc_ref[...] * ((2.0 / qmax) / s * vs_ref[0, 0])
 
 
 # ---------------------------------------------------------------------------
@@ -642,7 +659,8 @@ def int_decode_attention(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
 @functools.partial(jax.jit, static_argnames=(
     "attn_bits", "window", "packed", "interpret"))
 def int_paged_decode_attention(q_q, k_pages, v_pages, sc, v_scale,
-                               page_table, pos, *, attn_bits=7, window=None,
+                               page_table, pos, *, k_page_scale=None,
+                               v_page_scale=None, attn_bits=7, window=None,
                                packed=False, interpret=True):
     """Single-query integer decode attention over a PAGED KV cache, in place.
 
@@ -656,6 +674,18 @@ def int_paged_decode_attention(q_q, k_pages, v_pages, sc, v_scale,
     are per-sequence (B,) vectors (or scalars, broadcast): multi-tenant
     isolation means every sequence carries its own quantization grid.
     Returns (B, Hkv, G, D) f32.
+
+    Per-PAGE scale resolution (prefix sharing / CoW): with
+    ``k_page_scale`` / ``v_page_scale`` — (num_pages,) f32 vectors indexed
+    by PHYSICAL page id, first axis aligned with ``k_pages`` — grid step t
+    of row b dequantizes page ``page_table[b, lo_b + t]`` on THAT page's
+    stored grid: logit scale ``sc[b] * k_page_scale[phys]`` and PV
+    contribution ``pv * (v_scale[b] * v_page_scale[phys])`` accumulated
+    per block (the epilogue then applies only ``dattn``).  Pages shared
+    from a prefix owner therefore keep the scales they were prefilled
+    with, and a tenant's own activation grid never re-scales another's
+    codes.  Both vectors must be given together; ``None`` keeps the
+    per-sequence contract above bit-for-bit.
 
     This is :func:`int_decode_attention` with the runtime live-block map
     made per-sequence: grid step t of row b DMAs physical page
@@ -689,6 +719,14 @@ def int_paged_decode_attention(q_q, k_pages, v_pages, sc, v_scale,
                            (b, 1))
     vs2 = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32).reshape(-1, 1),
                            (b, 1))
+    page_scaled = k_page_scale is not None
+    assert page_scaled == (v_page_scale is not None), \
+        "k_page_scale and v_page_scale must be given together"
+    if page_scaled:
+        kps2 = jnp.asarray(k_page_scale, jnp.float32).reshape(num_phys, 1)
+        vps2 = jnp.asarray(v_page_scale, jnp.float32).reshape(num_phys, 1)
+    else:                 # dead operands; the kernel never reads them
+        kps2 = vps2 = jnp.ones((num_phys, 1), jnp.float32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -701,6 +739,10 @@ def int_paged_decode_attention(q_q, k_pages, v_pages, sc, v_scale,
                          lambda b, h, t, m: (m[b, 2 + t], h, 0, 0)),
             pl.BlockSpec((1, 1), lambda b, h, t, m: (b, 0)),
             pl.BlockSpec((1, 1), lambda b, h, t, m: (b, 0)),
+            # per-PHYSICAL-page k/v dequant steps ride the same phys-id
+            # stream as the page pools themselves
+            pl.BlockSpec((1, 1), lambda b, h, t, m: (m[b, 2 + t], 0)),
+            pl.BlockSpec((1, 1), lambda b, h, t, m: (m[b, 2 + t], 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, gq, d), lambda b, h, t, m: (b, h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((gq,), jnp.float32),
@@ -709,11 +751,12 @@ def int_paged_decode_attention(q_q, k_pages, v_pages, sc, v_scale,
     )
     out = pl.pallas_call(
         functools.partial(_paged_decode_kernel, nt=nt, page_size=page_size,
-                          window=window, qmax=qmax, packed=packed),
+                          window=window, qmax=qmax, packed=packed,
+                          page_scaled=page_scaled),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, gq, d), jnp.float32),
         interpret=interpret,
-    )(meta, q_q, k_pages, v_pages, sc2, vs2)
+    )(meta, q_q, k_pages, v_pages, sc2, vs2, kps2, vps2)
     return out[:, :, :g]
 
 

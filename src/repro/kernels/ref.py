@@ -184,7 +184,8 @@ def int_attention_ref_streamed(q_q, k_q, v_q, sc, v_scale, *, bk,
 
 
 def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
-                             attn_bits=7, causal=True, window=None, bk=None):
+                             attn_bits=7, causal=True, window=None, bk=None,
+                             k_factor=None, v_factor=None):
     """Decode-step oracle: (H, G, D) query row vs an (H, span, D) ring cache.
 
     ``k_positions`` (span,) maps ring slot -> absolute position (negative =
@@ -194,6 +195,16 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
     bit-matches the Pallas decode kernel.  ``sc``/``v_scale`` may be scalars
     or (h,) per-head-fold vectors (batch rows folded into the head axis
     quantize their queries per sequence).
+
+    ``k_factor`` / ``v_factor`` — (span,) per-key dequantization factors,
+    uniform inside each bk-block — are the reference semantics of the paged
+    kernel's per-PHYSICAL-page scale resolution (prefix-sharing): the logit
+    scale of key j becomes ``sc * k_factor[j]`` and each streamed block's
+    integer PV contribution is scaled by ``v_scale * v_factor[block]``
+    before accumulation (the epilogue then applies only ``dattn``),
+    mirroring the kernel op for op.  In full-row mode (``bk=None``) the
+    per-key v factor is applied to the prob codes before the (then float)
+    PV contraction — reference semantics only, used self-consistently.
     """
     h, g, d = q_q.shape
     span = k_q.shape[1]
@@ -205,7 +216,11 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
         mask &= k_positions > pos - window
     acc = jnp.einsum("hgd,hkd->hgk", q_q.astype(jnp.int32),
                      k_q.astype(jnp.int32))
-    x = acc.astype(jnp.float32) * _head_sc(sc, h)
+    if k_factor is not None:
+        x = acc.astype(jnp.float32) * (_head_sc(sc, h)
+                                       * k_factor[None, None, :])
+    else:
+        x = acc.astype(jnp.float32) * _head_sc(sc, h)
     x = jnp.maximum(jnp.where(mask[None, None, :], x, -1e30), -120.0)
 
     if bk is None:                                # full-row grid
@@ -213,6 +228,10 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
         e = jnp.where(x <= -120.0, 0.0, exp2_shift(x - m))
         s = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
         p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
+        if v_factor is not None:
+            pv = jnp.einsum("hgk,hkd->hgd", p_q * v_factor[None, None, :],
+                            v_q.astype(jnp.float32))
+            return pv * ((2.0 / qmax) / s * _head_sc(v_scale, h))
         pv = jnp.einsum("hgk,hkd->hgd", p_q.astype(jnp.int32),
                         v_q.astype(jnp.int32))
         return pv.astype(jnp.float32) * ((2.0 / qmax) / s
@@ -223,6 +242,9 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
         x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)), constant_values=-120.0)
         v_q = jnp.pad(v_q, ((0, 0), (0, pad), (0, 0)))
     nk = (span + pad) // bk
+    if v_factor is not None:
+        vf_blk = jnp.pad(v_factor, (0, pad),
+                         constant_values=1.0).reshape(nk, bk)[:, 0]
 
     def block(carry, t):
         m_old, s_run, pv = carry
@@ -233,13 +255,17 @@ def int_decode_attention_ref(q_q, k_q, v_q, sc, v_scale, k_positions, pos, *,
         p_q = jnp.clip(jnp.round(e * (qmax / 2.0)), 0, qmax)
         r = jnp.exp2(m_old - m_new)               # exact: both integers
         blk = jnp.einsum("hgk,hkd->hgd", p_q.astype(jnp.int32),
-                         vb.astype(jnp.int32))
+                         vb.astype(jnp.int32)).astype(jnp.float32)
+        if v_factor is not None:                  # per-block dv, kernel-wise
+            blk = blk * (_head_sc(v_scale, h) * vf_blk[t])
         return (m_new, s_run * r + jnp.sum(e, -1, keepdims=True),
-                pv * r + blk.astype(jnp.float32)), None
+                pv * r + blk), None
 
     init = (jnp.full((h, g, 1), -1e30), jnp.zeros((h, g, 1)),
             jnp.zeros((h, g, d)))
     (_, s, pv), _ = jax.lax.scan(block, init, jnp.arange(nk))
+    if v_factor is not None:
+        return pv * ((2.0 / qmax) / jnp.maximum(s, 1e-30))
     return pv * ((2.0 / qmax) / jnp.maximum(s, 1e-30) * _head_sc(v_scale, h))
 
 
@@ -261,7 +287,8 @@ def gather_pages(pages, page_table):
 
 def int_paged_decode_attention_ref(q_q, k_pages, v_pages, sc, v_scale,
                                    page_table, pos, *, attn_bits=7,
-                                   window=None, bk=None):
+                                   window=None, bk=None, k_page_scale=None,
+                                   v_page_scale=None):
     """Paged decode oracle: (B, Hkv, G, D) queries vs shared page pools.
 
     Shapes/contract as ``kernels.int_paged_decode_attention``; uint8 pools
@@ -272,8 +299,15 @@ def int_paged_decode_attention_ref(q_q, k_pages, v_pages, sc, v_scale,
     grid (the XLA fallback).  ``bk``: streamed grid; ``bk = page_size``
     bit-matches the Pallas paged kernel (leading out-of-window pages are
     fully masked, so streaming from logical page 0 is exact).
+
+    ``k_page_scale`` / ``v_page_scale``: (num_pages,) per-PHYSICAL-page
+    dequantization steps (the prefix-sharing resolution — shared pages stay
+    on the grid their owner prefilled them with).  They expand to per-key
+    factors through each row's page table and flow into the ring oracle's
+    ``k_factor``/``v_factor``, bit-matching the kernel at ``bk=page_size``.
     """
     b = q_q.shape[0]
+    num_phys = k_pages.shape[0]
     k = gather_pages(k_pages, page_table)
     v = gather_pages(v_pages, page_table)
     if k.dtype == jnp.uint8:                 # nibble-packed pools
@@ -287,6 +321,21 @@ def int_paged_decode_attention_ref(q_q, k_pages, v_pages, sc, v_scale,
     vs = jnp.broadcast_to(jnp.asarray(v_scale, jnp.float32).reshape(-1),
                           (b,))
     pos = jnp.asarray(pos, jnp.int32).reshape(b)
+
+    if k_page_scale is not None:
+        phys = jnp.clip(page_table, 0, num_phys - 1)
+        kfac = jnp.repeat(
+            jnp.asarray(k_page_scale, jnp.float32)[phys], ps, axis=1)
+        vfac = jnp.repeat(
+            jnp.asarray(v_page_scale, jnp.float32)[phys], ps, axis=1)
+
+        def one_ps(qb, kb, vb, scb, vsb, kpb, pb, kfb, vfb):
+            return int_decode_attention_ref(
+                qb, kb, vb, scb, vsb, kpb, pb, attn_bits=attn_bits,
+                causal=True, window=window, bk=bk, k_factor=kfb,
+                v_factor=vfb)
+
+        return jax.vmap(one_ps)(q_q, k, v, sc, vs, kpos, pos, kfac, vfac)
 
     def one(qb, kb, vb, scb, vsb, kpb, pb):
         return int_decode_attention_ref(qb, kb, vb, scb, vsb, kpb, pb,

@@ -21,10 +21,14 @@ Page-table layout (see also :func:`repro.models.lm.init_paged_cache`)::
                  -1 = inactive row (frozen, attends nothing)
     k/v scales  (batch_size,) per-sequence quantization steps per layer
 
-The engine owns the page allocator on the host: a free list of physical
-page ids plus host mirrors of ``pos``/``page_table``.  Device and host
-stay in sync without readbacks because the jitted step advances ``pos``
-deterministically (+1 per active row).
+The engine owns the page allocator on the host: a REFCOUNTED free list of
+physical page ids (:class:`PageAllocator`) plus host mirrors of
+``pos``/``page_table``.  Device and host stay in sync without readbacks
+because the jitted step advances ``pos`` deterministically (+1 per active
+row).  Admitting a request onto shared pages bumps their refcounts,
+eviction decrements, and a page recycles onto the free list only at
+ref == 0 — so a prefix owner's eviction never yanks pages out from under
+its sharers.
 
 Scheduling policy (deliberately simple, deterministic):
 
@@ -49,12 +53,35 @@ Scheduling policy (deliberately simple, deterministic):
   the free list) and the next queued request can take the row that same
   step.  Finished rows are never decoded.
 
-Follow-up (see ROADMAP): prefix-sharing / copy-on-write pages would let
-admissions with a common prompt prefix share physical pages.
+Prefix sharing / copy-on-write (this PR's tentpole): a request may declare
+a prompt-prefix cache breakpoint (``Request.prefix_len``, page-rounded
+down to ``len(prompt) - 1``).  Prompts then prefill in TWO chunks split at
+the breakpoint — the prefix chunk is a pure function of the prefix tokens,
+so its pages (immutable quantized codes + per-page scales, see
+:func:`repro.models.lm.init_paged_cache`) are registered in a prefix
+REGISTRY keyed by the hash of the prefix's token blocks.  A later request
+declaring the same prefix maps its leading logical pages onto those SAME
+physical pages (refcounted; the registry itself holds a pinning ref so
+entries survive their donor's eviction) and prefills only its divergent
+tail, attending the prefix through the cached codes on the owner's
+per-page scales.  Because both the prefix chunk and the tail chunk are
+deterministic pure functions, a sharer's served tokens are BIT-IDENTICAL
+to the same request served solo without sharing (which computes the same
+two chunks privately).  When the breakpoint falls inside a page, the
+partially filled boundary page is COPIED once at admission
+(copy-on-write; ``STATS["cow_page_copies"]``) so the sharer's tail writes
+never touch the donor's page.  Worst-case reservation counts only FRESH
+pages for sharers, so a W-way shared P-page prefix costs 1 prefix prefill
++ W tail prefills and (W - 1) * P fewer pool pages.  Under pool pressure,
+cold registry entries are reclaimed LRU-first (their pin released; pages
+recycle once no running row holds them).  Sharing requires an
+attention-only ``block_pattern`` (recurrent blocks would need their
+prefix-boundary states registered too) — other patterns serve unshared.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Optional
 
@@ -62,7 +89,80 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
 from repro.models import lm
+
+
+class PageAllocator:
+    """Refcounted physical-page allocator (free list + per-page refcounts).
+
+    Invariants (property-tested in ``tests/test_engine.py``):
+
+    - a page is on the free list iff its refcount is 0;
+    - :meth:`alloc` only hands out ref-0 pages, in FIFO free-list order
+      (fresh, exclusively owned at ref 1);
+    - :meth:`share` bumps refs of LIVE pages only — it can never resurrect
+      a freed page; :meth:`release` decrements and recycles at exactly
+      ref == 0;
+    - conservation: ``len(free) + |{p: refs[p] > 0}| == num_pages``.
+
+    Misuse (double free, sharing a dead page, over-allocation) raises
+    instead of corrupting the pool.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.refs = [0] * num_pages
+        self.free = list(range(num_pages))
+
+    @property
+    def free_count(self) -> int:
+        return len(self.free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self.free):
+            raise RuntimeError(
+                f"allocator: need {n} pages, only {len(self.free)} free")
+        pages = [self.free.pop(0) for _ in range(n)]
+        for p in pages:
+            if self.refs[p] != 0:
+                raise RuntimeError(f"allocator: free list held live page {p}")
+            self.refs[p] = 1
+        return pages
+
+    def share(self, pages):
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise RuntimeError(f"allocator: sharing dead page {p}")
+            self.refs[p] += 1
+
+    def release(self, pages):
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise RuntimeError(f"allocator: double free of page {p}")
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                self.free.append(p)
+
+    def check(self) -> bool:
+        """Assert the allocator invariants (used by the property tests)."""
+        live = {p for p in range(self.num_pages) if self.refs[p] > 0}
+        free = set(self.free)
+        assert len(self.free) == len(free), "free list holds duplicates"
+        assert not (live & free), "page both live and free"
+        assert len(free) + len(live) == self.num_pages, "pages leaked"
+        assert all(r >= 0 for r in self.refs), "negative refcount"
+        return True
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One registered (pinned) shared prefix: key -> physical pages."""
+    key: tuple
+    length: int                           # tokens
+    pages: list                           # ceil(length / page_size) phys ids
+    partial_page: Optional[int]           # last page iff length % ps != 0
+    hits: int = 0
 
 
 @dataclasses.dataclass
@@ -72,6 +172,12 @@ class Request:
     prompt: np.ndarray                    # (S,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # Declared shared-prefix length in tokens (a cache breakpoint, like API
+    # prompt caching): requests declaring byte-identical prefixes alias the
+    # same physical pages.  0 = no sharing; clamped to len(prompt) - 1 so
+    # the last prompt token always prefills as tail (its logits seed
+    # generation).
+    prefix_len: int = 0
     # filled by the engine:
     tokens: list = dataclasses.field(default_factory=list)
     admitted_step: int = -1
@@ -116,7 +222,7 @@ class PagedEngine:
                                          num_pages=self.num_pages)
         # Host-side allocator state (authoritative; device copies pushed
         # whenever admission/eviction dirties them).
-        self.free_pages = list(range(self.num_pages))
+        self.alloc = PageAllocator(self.num_pages)
         self.page_table = np.full((batch_size, self.max_pages), -1, np.int32)
         self.pos = np.full((batch_size,), -1, np.int32)
         self.row_req: list[Optional[Request]] = [None] * batch_size
@@ -126,43 +232,150 @@ class PagedEngine:
         self.rejected: list[Request] = []
         self.step_count = 0
         self.prefill_calls = 0            # batched admission-prefill launches
+        self.prefix_prefills = 0          # chunk-1 (shared prefix) launches
+        self.shared_prefix_hits = 0       # admissions served off the registry
+        # Shared-prefix registry: token-block-hash chain -> pinned pages.
+        # Insertion-ordered dict doubles as the LRU (reinserted on hit).
+        self.prefix_registry: dict[tuple, PrefixEntry] = {}
+        # CoW copies queued at admission, performed after this drain's
+        # chunk-1 prefills (a same-drain sharer must not copy a boundary
+        # page whose prefix codes have not been written yet).
+        self._pending_cow: list[tuple[int, int]] = []
+        self.sharing_enabled = all(k in ("attn", "local")
+                                   for k in lm.block_kinds(cfg))
         self._dirty = True
 
         def step_fn(params, tok, cache):
             return lm.decode_step(params, tok, cache, cfg)
 
-        def admit_fn(params, batch, cache, rows, page_table):
+        def admit_fn(params, batch, cache, rows, page_table, prefix_len):
             return lm.admission_prefill(params, batch, cfg, cache, rows,
-                                        page_table)
+                                        page_table, prefix_len=prefix_len)
 
         self._step = jax.jit(step_fn)
-        # Retraces once per (bucket, admission-batch-width) shape pair.
-        self._admit_prefill = jax.jit(admit_fn)
+        # Retraces once per (bucket, admission-batch-width, prefix-length)
+        # shape triple.
+        self._admit_prefill = jax.jit(admit_fn, static_argnums=(5,))
 
     # -- allocator ---------------------------------------------------------
 
+    @property
+    def free_pages(self) -> list:
+        """Ref-0 pages, FIFO order (the allocator's free list)."""
+        return self.alloc.free
+
     def _pages_needed(self, req: Request) -> int:
         return -(-(len(req.prompt) + req.max_new_tokens) // self.page_size)
+
+    def _effective_prefix(self, req: Request) -> int:
+        """The declared breakpoint, clamped so at least one token prefills
+        as tail (its logits seed generation); 0 when sharing is off."""
+        if not self.sharing_enabled or not req.prefix_len:
+            return 0
+        return max(0, min(int(req.prefix_len), len(req.prompt) - 1))
+
+    def _prefix_key(self, toks) -> tuple:
+        """Registry key: the chain of per-page token-block hashes."""
+        t = np.ascontiguousarray(np.asarray(toks, np.int32))
+        ps = self.page_size
+        return tuple(hashlib.sha1(t[i:i + ps].tobytes()).hexdigest()
+                     for i in range(0, len(t), ps))
+
+    def _req_key(self, req: Request, plen: int) -> tuple:
+        """This request's registry key, hashed once and cached on the
+        request (``can_admit`` runs every drain for a blocked queue head —
+        re-sha1-ing a long prefix per decode step would be pure waste)."""
+        key = getattr(req, "_prefix_key_cache", None)
+        if key is None:
+            key = self._prefix_key(req.prompt[:plen])
+            req._prefix_key_cache = key
+        return key
+
+    def _lookup_prefix(self, req: Request, plen: int):
+        """Registered entry for this request's declared prefix, or None."""
+        if not plen:
+            return None
+        entry = self.prefix_registry.get(self._req_key(req, plen))
+        return entry if entry is not None and entry.length == plen else None
+
+    def _fresh_pages_needed(self, req: Request) -> int:
+        """Worst-case reservation, net of registered shared pages: a
+        sharer allocates fresh pages only for its tail + generation (plus
+        one CoW copy target when the boundary page is partial — already
+        counted, since only FULL prefix pages are subtracted)."""
+        need = self._pages_needed(req)
+        plen = self._effective_prefix(req)
+        entry = self._lookup_prefix(req, plen)
+        if entry is not None:
+            need -= plen // self.page_size
+        return need
 
     def can_admit(self, req: Request) -> bool:
         need = self._pages_needed(req)
         # need <= max_pages: the request must also FIT one page-table row
         # (prompt + generation bounded by max_len), not just the free pool.
         return (None in self.row_req and need <= self.max_pages
-                and len(self.free_pages) >= need)
+                and self.alloc.free_count >= self._fresh_pages_needed(req))
 
     def submit(self, req: Request):
         self.queue.append(req)
 
     # -- admission ---------------------------------------------------------
 
+    def _cow_copy(self, src: int, dst: int):
+        """Copy-on-write: duplicate physical page ``src`` (codes + per-page
+        scales, every attention layer — ``lm.copy_page``) into the
+        sharer-owned page ``dst`` before the first divergent write lands in
+        it.  The donor's page — and therefore its subsequent tokens — are
+        untouched."""
+        self.cache = lm.copy_page(self.cache, src, dst)
+        dispatch.STATS["cow_page_copies"] += 1
+
     def _admit(self, req: Request, row: int):
         """Host-side admission: reserve the worst-case page count into the
-        row's table and claim the row.  The prompt itself prefills later,
-        batched with every other admission of this drain
-        (:meth:`_prefill_group`)."""
+        row's table and claim the row.  The prompt itself prefills later in
+        this drain (:meth:`_prefill_prefix` for a newly registered prefix,
+        then :meth:`_prefill_group` for the tail, batched with every other
+        admission of the same (prefix, bucket) group).
+
+        A registry HIT aliases the entry's full pages (refcount bump) and
+        CoW-copies a partial boundary page; a MISS with a declared prefix
+        allocates fresh pages and REGISTERS them (the registry takes its
+        own pinning ref, so the prefix outlives this request's eviction).
+        """
         need = self._pages_needed(req)
-        pages = [self.free_pages.pop(0) for _ in range(need)]
+        plen = self._effective_prefix(req)
+        entry = self._lookup_prefix(req, plen)
+        if entry is not None:                           # ---- sharer
+            full = plen // self.page_size
+            shared = list(entry.pages[:full])
+            fresh = self.alloc.alloc(need - full)
+            self.alloc.share(shared)
+            pages = shared + fresh
+            if entry.partial_page is not None:
+                # First divergent write will land inside the partially
+                # filled boundary page: copy it into the sharer's own page
+                # (deferred until after this drain's chunk-1 prefills).
+                # The source takes a ref for the pendency window, so a
+                # same-drain registry reclaim can neither free it nor let
+                # another donor's chunk-1 overwrite it before the copy.
+                self.alloc.share([entry.partial_page])
+                self._pending_cow.append((entry.partial_page, pages[full]))
+            entry.hits += 1
+            self.shared_prefix_hits += 1
+            key = entry.key                             # LRU: move to back
+            self.prefix_registry[key] = self.prefix_registry.pop(key)
+        else:
+            pages = self.alloc.alloc(need)
+            if plen:                                    # ---- donor
+                npre = -(-plen // self.page_size)
+                entry = PrefixEntry(
+                    key=self._req_key(req, plen), length=plen,
+                    pages=list(pages[:npre]),
+                    partial_page=pages[npre - 1]
+                    if plen % self.page_size else None)
+                self.alloc.share(entry.pages)           # registry pin
+                self.prefix_registry[entry.key] = entry
         self.row_pages[row] = pages
         self.page_table[row] = -1
         self.page_table[row, :need] = pages
@@ -171,59 +384,118 @@ class PagedEngine:
         req.admitted_step = self.step_count
         self._dirty = True
 
-    def _reject(self, req: Request):
-        req.error = (f"prompt length {len(req.prompt)} exceeds the largest "
+    def _reclaim_one(self, skip: Optional[tuple] = None) -> bool:
+        """Release the LRU registry entry's pin (pages recycle once no
+        running row still holds them).  ``skip`` protects the key the
+        pending admission is about to hit."""
+        for key in self.prefix_registry:
+            if key != skip:
+                entry = self.prefix_registry.pop(key)
+                self.alloc.release(entry.pages)
+                return True
+        return False
+
+    def _reject(self, req: Request, plen: int = 0):
+        if plen > self.prefill_buckets[-1]:
+            what = f"declared prefix length {plen}"
+        elif plen:
+            what = f"tail length {len(req.prompt) - plen}"
+        else:
+            what = f"prompt length {len(req.prompt)}"
+        req.error = (f"{what} exceeds the largest "
                      f"prefill bucket {self.prefill_buckets[-1]}")
         req.finished_step = self.step_count
         self.rejected.append(req)
 
     def _drain_queue(self):
-        """Admit every admittable queued request, then run ONE batched
-        prefill per prompt bucket.
+        """Admit every admittable queued request, then prefill: first one
+        chunk-1 launch per NEWLY REGISTERED prefix (so same-drain sharers
+        read codes that already exist), then ONE batched tail prefill per
+        (prefix length, tail bucket) group.
 
-        Over-length prompts (beyond the largest bucket — ``can_admit`` may
-        still say True because they fit the page pool) are rejected with a
-        recorded failure instead of crashing the serve loop.
+        Over-length prompts (tail or donor prefix beyond the largest
+        bucket — ``can_admit`` may still say True because they fit the page
+        pool) are rejected with a recorded failure instead of crashing the
+        serve loop.  Under pool pressure, cold registry entries are
+        reclaimed LRU-first before an admission is deferred.
         """
         admits = []
         while self.queue:
             req = self.queue[0]
-            if len(req.prompt) > self.prefill_buckets[-1]:
+            plen = self._effective_prefix(req)
+            if (len(req.prompt) - plen > self.prefill_buckets[-1]
+                    or plen > self.prefill_buckets[-1]):
                 self.queue.pop(0)
-                self._reject(req)
+                self._reject(req, plen)
                 continue
             if not self.can_admit(req):
-                break
+                own = self._req_key(req, plen) if plen else None
+                while not self.can_admit(req) and self._reclaim_one(own):
+                    pass
+                if not self.can_admit(req):
+                    break
             self.queue.pop(0)
             row = self.row_req.index(None)
+            # donor-ness decided BEFORE _admit registers the prefix
+            donor = plen > 0 and self._lookup_prefix(req, plen) is None
             self._admit(req, row)
-            admits.append((req, row))
-        groups: dict[int, list] = {}
-        for req, row in admits:
-            b = _bucket(len(req.prompt), self.prefill_buckets)
-            groups.setdefault(b, []).append((req, row))
-        for bucket in sorted(groups):
-            self._prefill_group(bucket, groups[bucket])
+            admits.append((req, row, plen, donor))
+        for req, row, plen, donor in admits:
+            if donor:
+                self._prefill_prefix(req, row, plen)
+        for src, dst in self._pending_cow:
+            self._cow_copy(src, dst)
+            self.alloc.release([src])           # pendency ref (see _admit)
+        self._pending_cow.clear()
+        groups: dict[tuple, list] = {}
+        for req, row, plen, donor in admits:
+            b = _bucket(len(req.prompt) - plen, self.prefill_buckets)
+            groups.setdefault((plen, b), []).append((req, row))
+        for plen, bucket in sorted(groups):
+            self._prefill_group(bucket, groups[(plen, bucket)], plen)
 
-    def _prefill_group(self, bucket: int, group):
-        """One batched ragged admission prefill: W prompts of one bucket
-        land their KV codes directly in the shared pools at the reserved
-        physical pages (lm.admission_prefill) — no private batch=1 cache
-        and no page-copy pass."""
+    def _prefill_prefix(self, req: Request, row: int, plen: int):
+        """Chunk-1: prefill a newly registered prefix ONCE, into its pinned
+        pages.  A pure function of the prefix tokens (W=1, bucket from
+        ``plen``, pages only name where codes land), so every future
+        sharer — and this request's own solo baseline — reads exactly
+        these codes and scales.  Logits are discarded: generation is
+        seeded by the tail chunk."""
+        bucket = _bucket(plen, self.prefill_buckets)
+        npre = -(-plen // self.page_size)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt[:plen]
+        ptw = np.full((1, self.max_pages), -1, np.int32)
+        ptw[0, :npre] = self.row_pages[row][:npre]
+        _, self.cache = self._admit_prefill(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray([plen], np.int32)},
+            self.cache, jnp.asarray([row], np.int32), jnp.asarray(ptw), 0)
+        self.prefill_calls += 1
+        self.prefix_prefills += 1
+
+    def _prefill_group(self, bucket: int, group, prefix_len: int = 0):
+        """One batched ragged admission prefill: W prompt TAILS of one
+        (prefix, bucket) group land their KV codes directly in the shared
+        pools at the reserved physical pages (lm.admission_prefill) — no
+        private batch=1 cache and no page-copy pass.  With a prefix, each
+        row's leading pages are the shared (or freshly prefilled) prefix
+        pages and the tail attends them through their stored codes."""
         w = len(group)
         toks = np.zeros((w, bucket), np.int32)
         lens = np.zeros((w,), np.int32)
         ptw = np.full((w, self.max_pages), -1, np.int32)
         rows = np.zeros((w,), np.int32)
         for j, (req, row) in enumerate(group):
-            toks[j, :len(req.prompt)] = req.prompt
-            lens[j] = len(req.prompt)
+            tail = req.prompt[prefix_len:]
+            toks[j, :len(tail)] = tail
+            lens[j] = len(tail)
             ptw[j] = self.page_table[row]
             rows[j] = row
         logits, self.cache = self._admit_prefill(
             self.params, {"tokens": jnp.asarray(toks),
                           "lengths": jnp.asarray(lens)},
-            self.cache, jnp.asarray(rows), jnp.asarray(ptw))
+            self.cache, jnp.asarray(rows), jnp.asarray(ptw), prefix_len)
         self.prefill_calls += 1
         first = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         for j, (req, row) in enumerate(group):
@@ -242,7 +514,7 @@ class PagedEngine:
     def _evict(self, row: int):
         req = self.row_req[row]
         req.finished_step = self.step_count
-        self.free_pages.extend(self.row_pages[row])
+        self.alloc.release(self.row_pages[row])
         self.row_pages[row] = []
         self.row_req[row] = None
         self.page_table[row] = -1

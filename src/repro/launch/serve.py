@@ -9,7 +9,11 @@ Q-ViT-style dequantize-first baseline for comparison.
 Requests with ragged prompt lengths flow through
 :class:`repro.launch.engine.PagedEngine`: admitted as batch rows free up,
 decoded at per-sequence positions, evicted on their own EOS — finished
-rows are never decoded again.  The run always reports the kernel-dispatch
+rows are never decoded again.  ``--shared-prefix N`` models
+system-prompt-heavy traffic: every request carries the same N-token
+prefix declared as a cache breakpoint, so the engine prefills it ONCE and
+aliases its refcounted pages across all requests (``prefix_prefills`` /
+``shared_prefix_hits`` in the report).  The run always reports the kernel-dispatch
 STATS: in CI it is the regression signal that the serving graph really
 traced onto the Pallas kernels (``attention_paged_pallas`` > 0 for the
 decode loop) instead of silently falling back to XLA.  ``--json`` emits
@@ -34,13 +38,17 @@ from repro.models import lm
 
 def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
           max_len: int | None = None, page_size: int = 16,
-          eos_id: int | None = None, batch_size: int | None = None):
+          eos_id: int | None = None, batch_size: int | None = None,
+          prefix_len: int = 0):
     """prompts: (B, S) int32 (or a list of ragged 1-D prompts) ->
     (generated (B, gen_tokens) int32, stats).
 
     Runs the continuous-batching engine; with equal-length prompts and no
     EOS this reproduces the old lockstep loop, but rows finish (and new
-    work is admitted) independently.
+    work is admitted) independently.  ``prefix_len`` declares a shared
+    cache breakpoint on every request (system-prompt traffic): requests
+    whose leading ``prefix_len`` tokens agree alias the same refcounted
+    physical pages and prefill that prefix ONCE.
     """
     if hasattr(prompts, "shape"):
         prompts = [np.asarray(prompts[i], np.int32)
@@ -49,7 +57,8 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
     max_len = max_len or (max(lens) + gen_tokens)
     bucket = max(lens)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=gen_tokens,
-                    eos_id=eos_id) for i, p in enumerate(prompts)]
+                    eos_id=eos_id, prefix_len=prefix_len)
+            for i, p in enumerate(prompts)]
 
     t0 = time.perf_counter()
     engine = PagedEngine(cfg, params, batch_size=batch_size or len(reqs),
@@ -76,6 +85,9 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
                      "error": r.error} for r in reqs],
         "engine_steps": engine.step_count,
         "prefill_calls": engine.prefill_calls,
+        "prefix_prefills": engine.prefix_prefills,
+        "shared_prefix_hits": engine.shared_prefix_hits,
+        "registered_prefixes": len(engine.prefix_registry),
         "rejected": len(engine.rejected),
         "dispatch": dispatch.snapshot(),
     }
@@ -99,6 +111,12 @@ def main(argv=None):
                     help="max prompt length; requests get staggered "
                          "lengths up to this")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common system prompt of this many "
+                         "tokens to every request and declare it as a "
+                         "cache breakpoint: the engine prefills it once "
+                         "and aliases its pages (refcounted) across all "
+                         "requests")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--json", action="store_true",
@@ -123,10 +141,15 @@ def main(argv=None):
     lens = [max(1, args.prompt_len - (i * args.prompt_len) // (2 * n_req))
             for i in range(n_req)]
     prompts = [rng.randint(0, cfg.vocab, n).astype(np.int32) for n in lens]
+    if args.shared_prefix:
+        sys_prompt = rng.randint(0, cfg.vocab,
+                                 args.shared_prefix).astype(np.int32)
+        prompts = [np.concatenate([sys_prompt, p]) for p in prompts]
     dispatch.reset_stats()
     toks, stats = serve(cfg, params, prompts, gen_tokens=args.gen,
                         page_size=args.page_size, eos_id=args.eos_id,
-                        batch_size=args.batch)
+                        batch_size=args.batch,
+                        prefix_len=args.shared_prefix)
     if args.json:
         print(json.dumps({"mode": args.mode, "backend": args.backend,
                           "sample": toks[0, :12].tolist(), **stats},
@@ -136,6 +159,8 @@ def main(argv=None):
           f"decode {stats['decode_s']:.3f}s  {stats['tok_per_s']:.1f} tok/s  "
           f"steps {stats['engine_steps']}  "
           f"prefills {stats['prefill_calls']}  "
+          f"(prefix {stats['prefix_prefills']}, "
+          f"hits {stats['shared_prefix_hits']})  "
           f"rejected {stats['rejected']}")
     for s in stats["per_seq"]:
         tail = f"REJECTED: {s['error']}" if s["error"] else \

@@ -43,9 +43,15 @@ float) before its einsums.
 Paged KV caches (continuous batching) use :func:`paged_attention` instead:
 shared ``(num_pages, Hkv, page_size, D[/2])`` pools, a per-sequence
 ``(B, max_pages)`` page table, per-sequence positions and per-sequence
-KV scales.  The Pallas paged kernel reads the pools in place; the XLA
-fallback gathers each sequence's pages as *codes* and runs the full-row
-oracle grid per row (int mode), or gathers stored floats (float mode).
+KV scales — or, with ``k_page_scale``/``v_page_scale`` pools (the
+prefix-sharing layout), per-PHYSICAL-page scales so shared pages keep
+their owner's grid.  The Pallas paged kernel reads the pools in place;
+the XLA fallback gathers each sequence's pages as *codes* and runs the
+full-row oracle grid per row (int mode), or gathers stored floats (float
+mode).  :func:`prefix_prefill_attention` is the tail-chunk prefill over a
+cached prefix (chunked prefill / prefix sharing): fresh tail queries
+attend already-cached prefix codes plus the fresh tail, XLA-only so both
+backends serve identical tokens.
 """
 from __future__ import annotations
 
@@ -200,7 +206,8 @@ def _row_attention(q, k, v, q_pos, k_pos, spec: AttnSpec,
 
 
 def paged_attention(q, k_pages, v_pages, k_scale, v_scale, page_table, pos,
-                    spec: AttnSpec, cfg: Optional[QuantConfig] = None):
+                    spec: AttnSpec, cfg: Optional[QuantConfig] = None, *,
+                    k_page_scale=None, v_page_scale=None):
     """One decode step of multi-head attention over a PAGED KV cache.
 
     q: (B, Hq, 1, D) float; k_pages, v_pages: shared page pools as stored —
@@ -210,6 +217,12 @@ def paged_attention(q, k_pages, v_pages, k_scale, v_scale, page_table, pos,
     inactive row, output unspecified); ``k_scale``/``v_scale``: (B,)
     per-sequence dequantization steps (ignored for float pools).  Returns
     (B, Hq, 1, D).
+
+    ``k_page_scale``/``v_page_scale`` — (num_pages,) per-PHYSICAL-page
+    dequantization steps, the prefix-sharing cache layout — switch both
+    backends to per-page scale resolution: every page dequantizes on the
+    grid it was PREFILLED with (a shared prefix page on its owner's scale),
+    and ``k_scale``/``v_scale`` are ignored.
 
     int mode dispatches to the Pallas paged kernel when supported; the XLA
     fallback gathers pages per sequence as codes (nibbles unpack to int8 —
@@ -225,19 +238,22 @@ def paged_attention(q, k_pages, v_pages, k_scale, v_scale, page_table, pos,
     if mode == "int":
         from repro.kernels import ref as kref
         from repro.kernels.dispatch import (maybe_paged_attention,
-                                            paged_query_grid)
+                                            paged_read_grid)
         out = maybe_paged_attention(q, k_pages, v_pages, k_scale, v_scale,
                                     spec, cfg, page_table=page_table,
-                                    pos=pos)
+                                    pos=pos, k_page_scale=k_page_scale,
+                                    v_page_scale=v_page_scale)
         if out is not None:                    # Pallas kernel path
             return out
-        # Same grid derivation as the kernel path (paged_query_grid), so
+        # Same grid derivation as the kernel path (paged_read_grid), so
         # the backends stay bit-identical by construction.
-        qq, sc = paged_query_grid(q, spec, cfg, k_scale)
+        qq, sc, vs = paged_read_grid(q, spec, cfg, k_scale, v_scale,
+                                     k_page_scale is not None)
         out = kref.int_paged_decode_attention_ref(
-            qq.reshape(b, hkv, g, d), k_pages, v_pages, sc, v_scale,
+            qq.reshape(b, hkv, g, d), k_pages, v_pages, sc, vs,
             page_table, pos, attn_bits=cfg.attn_bits, window=spec.window,
-            bk=k_pages.shape[2])
+            bk=k_pages.shape[2], k_page_scale=k_page_scale,
+            v_page_scale=v_page_scale)
         return out.reshape(b, hq, 1, d).astype(q.dtype)
 
     # float pools: gather (stored floats ARE the storage format) + softmax.
@@ -258,6 +274,138 @@ def paged_attention(q, k_pages, v_pages, k_scale, v_scale, page_table, pos,
     p = jax.nn.softmax(x, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(q.dtype))
     return out.reshape(b, hq, 1, d)
+
+
+def prefix_prefill_attention(q, k, v, k_pre, v_pre, pre_k_scale, pre_v_scale,
+                             prefix_len: int, lengths, spec: AttnSpec,
+                             cfg: Optional[QuantConfig] = None):
+    """Tail-chunk prefill attention over a cached (possibly shared) prefix.
+
+    The serving path of chunked prefill: a request admitted onto shared
+    prefix pages prefills only its divergent tail, and the tail attends the
+    prefix THROUGH ITS CACHED CODES — exactly as decode will later — so the
+    computation is a pure function of (prefix cache, tail tokens).  Because
+    a prefix chunk's own prefill is in turn a pure function of the prefix
+    tokens, a sharer's tail here is bit-identical to the same request
+    prefilling a private prefix first (the engine's sharing parity
+    contract).  Deliberately XLA-only: both kernel backends run this same
+    graph, so toggling the backend cannot change served tokens.
+
+    q: (B, Hq, St, D) fresh tail queries at absolute positions
+    ``prefix_len + i``; k, v: (B, Hkv, St, D) fresh tail keys/values
+    (right-padded, ``lengths`` (B,) true tail lengths).  k_pre, v_pre:
+    (B, Hkv, Kp, D) the prefix KV gathered from the page pools — int8
+    codes in int mode (int4 nibbles unpacked by the caller, never to
+    float), stored floats otherwise; Kp covers whole pages and positions
+    ``>= prefix_len`` (a partially filled CoW boundary page) are masked.
+    pre_k_scale / pre_v_scale: (B, Kp // page_size) per-page dequant steps
+    (int mode) — the PREFIX OWNER's grids.  Returns (B, Hq, St, D).
+    """
+    b, hq, st, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kp = k_pre.shape[2]
+    mode = cfg.mode if cfg is not None else "float"
+    scale = spec.softmax_scale or (1.0 / d ** 0.5)
+    lens = jnp.full((b,), st, jnp.int32) if lengths is None \
+        else jnp.asarray(lengths, jnp.int32)
+    pre_pos = jnp.arange(kp)
+    tail_pos = prefix_len + jnp.arange(st)
+    qg = q.reshape(b, hkv, g, st, d)
+
+    def masks(q_pos, bq):
+        m_pre = (pre_pos[None, :] < prefix_len) & \
+                (pre_pos[None, :] <= q_pos[:, None])
+        m_tail = (tail_pos[None, None, :] <= q_pos[None, :, None]) & \
+                 (tail_pos[None, None, :] <
+                  (prefix_len + lens)[:, None, None])
+        if spec.window is not None:
+            m_pre = m_pre & (pre_pos[None, :] > q_pos[:, None] - spec.window)
+            m_tail = m_tail & (tail_pos[None, None, :] >
+                               q_pos[None, :, None] - spec.window)
+        m_pre = jnp.broadcast_to(m_pre[None, None, None],
+                                 (b, hkv, g, bq, kp))
+        m_tail = jnp.broadcast_to(m_tail[:, None, None],
+                                  (b, hkv, g, bq, st))
+        return jnp.concatenate([m_pre, m_tail], axis=-1)
+
+    if mode == "int":
+        npg = pre_k_scale.shape[1]
+        ps = kp // npg
+        kq = _as_q_rows(k, cfg.a_bits)
+        vq = _as_q_rows(v, cfg.a_bits)
+        qmaxp = (1 << cfg.attn_bits) - 1
+        kfac = jnp.repeat(pre_k_scale.astype(jnp.float32), ps, axis=1)
+
+        def one_chunk(ci, qc):
+            bq = qc.shape[3]
+            q_pos = prefix_len + ci * bq + jnp.arange(bq)
+            mask = masks(q_pos, bq)
+            qq = _as_q_rows(qc, cfg.a_bits)
+            base = scale * LOG2E * _sc5(qq.scale)
+            acc_pre = jnp.einsum("bhgqd,bhkd->bhgqk", qq.q, k_pre,
+                                 preferred_element_type=ACC_DTYPE)
+            x_pre = acc_pre.astype(jnp.float32) * \
+                (base * kfac[:, None, None, None, :])
+            acc_t = jnp.einsum("bhgqd,bhkd->bhgqk", qq.q, kq.q,
+                               preferred_element_type=ACC_DTYPE)
+            x_t = acc_t.astype(jnp.float32) * (base * _sc5(kq.scale))
+            x = jnp.concatenate([x_pre, x_t], axis=-1)
+            x = jnp.maximum(jnp.where(mask, x, NEG_BIG), -120.0)
+            m = jnp.floor(jnp.max(x, axis=-1, keepdims=True))
+            e = exp2_shift(x - m) if cfg.softmax == "base2" \
+                else jnp.exp2(x - m)
+            e = jnp.where(mask & (x > -120.0), e, 0.0)
+            sigma = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+            dattn = (2.0 / qmaxp) / sigma
+            p_q = jnp.clip(jnp.round(e * (qmaxp / 2.0)), 0,
+                           qmaxp).astype(ACC_DTYPE)
+            # Prefix PV: integer contraction PER PAGE, each page's int32
+            # partial scaled by ITS OWN stored dv before the f32 sum —
+            # the same per-page resolution the paged decode kernel applies.
+            pp = p_q[..., :kp].reshape(b, hkv, g, bq, npg, ps)
+            vpre = v_pre.astype(ACC_DTYPE).reshape(b, hkv, npg, ps, d)
+            pv_pre = jnp.einsum("bhgqnk,bhnkd->bhgqnd", pp, vpre,
+                                preferred_element_type=ACC_DTYPE)
+            pv_pre = jnp.sum(
+                pv_pre.astype(jnp.float32)
+                * pre_v_scale[:, None, None, None, :, None], axis=4)
+            pv_t = jnp.einsum("bhgqk,bhkd->bhgqd", p_q[..., kp:], vq.q,
+                              preferred_element_type=ACC_DTYPE)
+            pv = pv_pre + pv_t.astype(jnp.float32) * _sc5(vq.scale)
+            return (pv * dattn).astype(q.dtype)
+    else:
+        kpre_f = k_pre.astype(q.dtype)
+        vpre_f = v_pre.astype(q.dtype)
+
+        def one_chunk(ci, qc):
+            bq = qc.shape[3]
+            q_pos = prefix_len + ci * bq + jnp.arange(bq)
+            mask = masks(q_pos, bq)
+            x = jnp.concatenate(
+                [jnp.einsum("bhgqd,bhkd->bhgqk", qc, kpre_f),
+                 jnp.einsum("bhgqd,bhkd->bhgqk", qc, k.astype(q.dtype))],
+                axis=-1).astype(jnp.float32) * scale
+            x = jnp.where(mask, x, NEG_BIG)
+            p = jax.nn.softmax(x, axis=-1).astype(q.dtype)
+            vcat = jnp.concatenate([vpre_f, v.astype(q.dtype)], axis=2)
+            return jnp.einsum("bhgqk,bhkd->bhgqd", p, vcat)
+
+    from repro.kernels.dispatch import chunk_len
+    bq = chunk_len(st, spec.q_chunk)
+    n_chunks = st // bq
+    if n_chunks == 1:
+        out = one_chunk(0, qg)
+        return out.reshape(b, hq, st, d)
+    qs = jnp.moveaxis(qg.reshape(b, hkv, g, n_chunks, bq, d), 3, 0)
+
+    def body(_, args):
+        ci, qc = args
+        return None, one_chunk(ci, qc)
+
+    _, outs = _scan(body, None, (jnp.arange(n_chunks), qs))
+    out = jnp.moveaxis(outs, 0, 3)
+    return out.reshape(b, hq, st, d)
 
 
 def attention(q, k, v, spec: AttnSpec, cfg: Optional[QuantConfig] = None, *,

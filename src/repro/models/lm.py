@@ -25,8 +25,11 @@ page is the TRASH page — all masked/unallocated writes land there and it
 is never read), and the cache top level carries per-sequence state:
 ``pos (B,)`` (negative = inactive row) and ``page_table (B, max_pages)``
 (sequence b's logical page l lives in physical page ``page_table[b, l]``;
-negative = unallocated).  Scales are per-sequence ``(B,)`` so admitting a
-hot sequence can never re-scale another tenant's cached codes.  Logical
+negative = unallocated).  Scales calibrate per sequence ``(B,)`` but are
+READ per PHYSICAL page (``page_k_scale``/``page_v_scale`` pools, written
+at prefill for every reserved page): a hot sequence can never re-scale
+another tenant's cached codes, and a page aliased from a shared prefix
+dequantizes with its OWNER's grid wherever it is read.  Logical
 position p of a sequence lives at page ``p // page_size``, row
 ``p % page_size`` — the slot->position map of the ring becomes implicit.
 Ragged prefill (``batch["lengths"]``) writes each row's own pages and
@@ -40,6 +43,14 @@ batch=1 cache, no page-copy pass) and, because every activation grid is
 per sequence, each admitted row is bit-identical to a solo prefill.  Page
 allocation/recycling policy lives in :mod:`repro.launch.engine` — this
 module only reads/writes what the page table names.
+
+Prefix sharing (``prefix_len`` through :func:`forward` /
+:func:`paged_prefill` / :func:`admission_prefill`): a prompt whose first
+``prefix_len`` positions are already cached — its own prefix chunk, or a
+prefix SHARED from another sequence's pages — prefills only the tail; the
+tail attends the prefix through its cached codes on the pages' stored
+grids (:func:`repro.layers.attention.prefix_prefill_attention`), which is
+what makes a shared prefix bit-identical to a privately prefilled one.
 """
 from __future__ import annotations
 
@@ -52,7 +63,8 @@ import jax.numpy as jnp
 from repro.core.api import QuantConfig, dense
 from repro.core.quant import QTensor
 from repro.layers import moe as moe_lib
-from repro.layers.attention import AttnSpec, attention, paged_attention
+from repro.layers.attention import (AttnSpec, attention, paged_attention,
+                                    prefix_prefill_attention)
 from repro.layers.embed import embed_lookup, init_embed
 from repro.layers.mlp import init_mlp, mlp
 from repro.layers.moe import MoEConfig
@@ -236,7 +248,16 @@ def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
 
 def _paged_attn_cache(cfg: LMConfig, batch: int, num_pages: int,
                       page_size: int) -> dict:
-    """Shared page pools (+1 trash page) with per-sequence (B,) scales."""
+    """Shared page pools (+1 trash page) with per-sequence (B,) scales.
+
+    int mode additionally carries per-PHYSICAL-page scale pools
+    ``page_k_scale``/``page_v_scale`` (num_pages + 1,): entry p is the
+    dequantization step page p's codes were PREFILLED with.  Reads resolve
+    scales through these pools, which is what makes physical-page sharing
+    safe — a prefix page aliased into another sequence's table dequantizes
+    with its owner's grid, and the (B,) per-sequence scales remain the
+    calibration record (and the source the prefill scatters from).
+    """
     mode = cfg.quant.mode if cfg.quant else "float"
     kv4 = mode == "int" and cfg.quant.kv_bits == 4
     dk = cfg.hd // 2 if kv4 else cfg.hd
@@ -246,6 +267,8 @@ def _paged_attn_cache(cfg: LMConfig, batch: int, num_pages: int,
     if mode == "int":
         c["k_scale"] = jnp.ones((batch,), jnp.float32)
         c["v_scale"] = jnp.ones((batch,), jnp.float32)
+        c["page_k_scale"] = jnp.ones((num_pages + 1,), jnp.float32)
+        c["page_v_scale"] = jnp.ones((num_pages + 1,), jnp.float32)
     return c
 
 
@@ -291,49 +314,69 @@ def _paged_write_decode(cache, k1, v1, positions, page_table, mode, qcfg):
     k1, v1: (B, Hkv, hd).  Row b goes to physical page
     ``page_table[b, pos_b // page_size]`` at page row ``pos_b % page_size``;
     unallocated/inactive rows land in the trash page.  Codes are emitted on
-    each sequence's own (B,) scale.
+    the TARGET PAGE's registered scale (``page_k_scale[phys]``): the
+    prefill pre-registered every reserved page on the row's own grid, so
+    this equals the old per-sequence scale for private rows — but a decode
+    write that lands in a CoW'd partial boundary page keeps that page's
+    (prefix owner's) grid, so one page never mixes two quantization grids.
     """
     pos = positions[:, 0]
     num_phys = cache["k_pages"].shape[0] - 1       # last page = trash
     ps = cache["k_pages"].shape[2]
+    logical = jnp.clip(pos // ps, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    phys = jnp.where((phys >= 0) & (pos >= 0), phys, num_phys)
+    row = jnp.mod(pos, ps)
     if mode == "int" and qcfg.kv_bits == 4:
         from repro.core.quant import pack_int4, qrange
         qmin, qmax = qrange(4)
-        ks, vs = cache["k_scale"], cache["v_scale"]
+        ks, vs = cache["page_k_scale"][phys], cache["page_v_scale"][phys]
         kq = pack_int4(jnp.clip(jnp.round(k1 / ks[:, None, None]),
                                 qmin, qmax).astype(jnp.int8))
         vq = pack_int4(jnp.clip(jnp.round(v1 / vs[:, None, None]),
                                 qmin, qmax).astype(jnp.int8))
     elif mode == "int":
-        kq = jnp.round(k1 / cache["k_scale"][:, None, None]).astype(jnp.int8)
-        vq = jnp.round(v1 / cache["v_scale"][:, None, None]).astype(jnp.int8)
+        ks, vs = cache["page_k_scale"][phys], cache["page_v_scale"][phys]
+        kq = jnp.round(k1 / ks[:, None, None]).astype(jnp.int8)
+        vq = jnp.round(v1 / vs[:, None, None]).astype(jnp.int8)
     else:
         kq = k1.astype(cache["k_pages"].dtype)
         vq = v1.astype(cache["v_pages"].dtype)
-    logical = jnp.clip(pos // ps, 0, page_table.shape[1] - 1)
-    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
-    phys = jnp.where((phys >= 0) & (pos >= 0), phys, num_phys)
-    row = jnp.mod(pos, ps)
     ck = cache["k_pages"].at[phys, :, row].set(kq)
     cv = cache["v_pages"].at[phys, :, row].set(vq)
     return dict(cache, k_pages=ck, v_pages=cv)
 
 
 def _paged_write_prefill(cache, k, v, positions, lengths, page_table, mode,
-                         qcfg):
+                         qcfg, prefix_len: int = 0):
     """Scatter a whole (ragged) prompt's keys/values into per-row pages.
 
-    k, v: (B, Hkv, S, hd).  Row b's positions ``>= lengths[b]`` are pad:
-    they are excluded from the per-sequence scale calibration and their
-    writes land in the trash page.  Returns the cache with pools and
-    per-sequence scales updated.
+    k, v: (B, Hkv, S, hd) at absolute positions ``prefix_len + i``.  Row
+    b's positions ``>= prefix_len + lengths[b]`` are pad: they are
+    excluded from the per-sequence scale calibration and their writes land
+    in the trash page.  Returns the cache with pools, per-sequence scales
+    AND per-page scale registrations updated.
+
+    Per-page scale registration (int mode): every allocated page-table
+    entry from the first fully-owned page on (logical id
+    ``>= ceil(prefix_len / page_size)`` — i.e. excluding shared prefix
+    pages and a CoW'd partial boundary page, which keep the grids their
+    prefix chunk registered) gets the row's fresh scale — including
+    reserved-but-unwritten decode pages, so decode writes always find
+    their page's grid.  Codes are then emitted on each position's TARGET
+    PAGE's registered scale: identical to the per-sequence grid for
+    private pages, the prefix owner's grid inside a shared boundary page.
     """
     b, _, s, _ = k.shape
     num_phys = cache["k_pages"].shape[0] - 1
     ps = cache["k_pages"].shape[2]
     lens = jnp.full((b,), s, jnp.int32) if lengths is None \
         else jnp.asarray(lengths, jnp.int32)
-    valid = positions < lens[:, None]                        # (B, S)
+    valid = positions < (prefix_len + lens)[:, None]         # (B, S)
+    logical = jnp.clip(positions // ps, 0, page_table.shape[1] - 1)
+    phys = jnp.take_along_axis(page_table, logical, axis=1)    # (B, S)
+    phys = jnp.where(valid & (phys >= 0), phys, num_phys)
+    row = jnp.mod(positions, ps)
     new_cache = dict(cache)
     if mode == "int":
         from repro.core.quant import pack_int4, qrange
@@ -346,20 +389,27 @@ def _paged_write_prefill(cache, k, v, positions, lengths, page_table, mode,
             return jnp.maximum(amax.astype(jnp.float32), 1e-8) / qmax
 
         ksc, vsc = rowscale(k), rowscale(v)
-        kq = jnp.clip(jnp.round(k / ksc[:, None, None, None]),
-                      qmin, qmax).astype(jnp.int8)
-        vq = jnp.clip(jnp.round(v / vsc[:, None, None, None]),
-                      qmin, qmax).astype(jnp.int8)
+        new_cache["k_scale"], new_cache["v_scale"] = ksc, vsc
+        # Register the row's grid on every fully-owned allocated page.
+        own_from = -(-prefix_len // ps)
+        maxp = page_table.shape[1]
+        ownable = (jnp.arange(maxp)[None, :] >= own_from) & (page_table >= 0)
+        tgt = jnp.where(ownable, page_table, num_phys)
+        pks = cache["page_k_scale"].at[tgt].set(
+            jnp.broadcast_to(ksc[:, None], (b, maxp)))
+        pvs = cache["page_v_scale"].at[tgt].set(
+            jnp.broadcast_to(vsc[:, None], (b, maxp)))
+        new_cache["page_k_scale"], new_cache["page_v_scale"] = pks, pvs
+        # Emit codes on each position's target-page grid.
+        kstep = pks[phys][:, None, :, None]                  # (B,1,S,1)
+        vstep = pvs[phys][:, None, :, None]
+        kq = jnp.clip(jnp.round(k / kstep), qmin, qmax).astype(jnp.int8)
+        vq = jnp.clip(jnp.round(v / vstep), qmin, qmax).astype(jnp.int8)
         if kv4:
             kq, vq = pack_int4(kq), pack_int4(vq)
-        new_cache["k_scale"], new_cache["v_scale"] = ksc, vsc
     else:
         kq = k.astype(cache["k_pages"].dtype)
         vq = v.astype(cache["v_pages"].dtype)
-    logical = jnp.clip(positions // ps, 0, page_table.shape[1] - 1)
-    phys = jnp.take_along_axis(page_table, logical, axis=1)    # (B, S)
-    phys = jnp.where(valid & (phys >= 0), phys, num_phys)
-    row = jnp.mod(positions, ps)
     upd_k = kq.transpose(0, 2, 1, 3)                           # (B,S,Hkv,dk)
     upd_v = vq.transpose(0, 2, 1, 3)
     new_cache["k_pages"] = cache["k_pages"].at[phys, :, row].set(upd_k)
@@ -368,7 +418,7 @@ def _paged_write_prefill(cache, k, v, positions, lengths, page_table, mode,
 
 
 def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode,
-                page_table=None, lengths=None):
+                page_table=None, lengths=None, prefix_len: int = 0):
     b, s, _ = x.shape
     hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.kv_heads
     qcfg = cfg.quant
@@ -396,7 +446,8 @@ def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode,
     if paged and decode:
         # Paged decode: write each row at its own position, then attend
         # through the per-sequence page tables (only that row's live pages
-        # stream; scales are per-sequence).
+        # stream).  int mode resolves k/v scales PER PHYSICAL PAGE, so a
+        # page shared from a prefix owner dequantizes on the owner's grid.
         new_cache = _paged_write_decode(cache, jnp.squeeze(k, 2),
                                         jnp.squeeze(v, 2), positions,
                                         page_table, mode, qcfg)
@@ -404,7 +455,33 @@ def _attn_mixer(x, p, cfg: LMConfig, kind: str, positions, cache, decode,
         out = paged_attention(q, new_cache["k_pages"], new_cache["v_pages"],
                               new_cache.get("k_scale", ones),
                               new_cache.get("v_scale", ones),
-                              page_table, positions[:, 0], spec, qcfg)
+                              page_table, positions[:, 0], spec, qcfg,
+                              k_page_scale=new_cache.get("page_k_scale"),
+                              v_page_scale=new_cache.get("page_v_scale"))
+    elif paged and prefix_len:
+        # Tail-chunk prefill onto an already-cached prefix (prefix sharing):
+        # the fresh tail attends the prefix THROUGH ITS CACHED CODES on the
+        # pages' stored grids — never dequantized to float, never re-scaled
+        # — then scatters only its own tail pages (pads -> trash).
+        ps_ = cache["k_pages"].shape[2]
+        npre = -(-prefix_len // ps_)
+        num_phys = cache["k_pages"].shape[0] - 1
+        from repro.kernels.ref import gather_pages
+        k_pre = gather_pages(cache["k_pages"], page_table[:, :npre])
+        v_pre = gather_pages(cache["v_pages"], page_table[:, :npre])
+        if mode == "int":
+            if k_pre.dtype == jnp.uint8:
+                from repro.core.quant import unpack_int4
+                k_pre, v_pre = unpack_int4(k_pre), unpack_int4(v_pre)
+            idx = jnp.clip(page_table[:, :npre], 0, num_phys)
+            pks, pvs = cache["page_k_scale"][idx], cache["page_v_scale"][idx]
+        else:
+            pks = pvs = None
+        out = prefix_prefill_attention(q, k, v, k_pre, v_pre, pks, pvs,
+                                       prefix_len, lengths, spec, qcfg)
+        new_cache = _paged_write_prefill(cache, k, v, positions, lengths,
+                                         page_table, mode, qcfg,
+                                         prefix_len=prefix_len)
     elif paged:
         # Paged (ragged) prefill: attention over the fresh prompt is the
         # ordinary prefill path; the cache write scatters each row's keys
@@ -498,13 +575,15 @@ def _merge(x):
 
 
 def apply_block(x, p, cfg: LMConfig, kind: str, *, positions, cache=None,
-                decode=False, page_table=None, lengths=None):
+                decode=False, page_table=None, lengths=None,
+                prefix_len: int = 0):
     aux = {}
     h = apply_norm(x, p["ln1"], cfg.norm)
     h = shard(h, "batch", "seq_tp", None)
     if kind in ("attn", "local"):
         out, new_cache = _attn_mixer(h, p["attn"], cfg, kind, positions,
-                                     cache, decode, page_table, lengths)
+                                     cache, decode, page_table, lengths,
+                                     prefix_len)
     elif kind == "rglru":
         out, new_cache = rglru_block(h, p["rglru"], cfg.quant,
                                      state=cache if decode else None)
@@ -537,7 +616,8 @@ def _zeros_aux():
 
 
 def stack_forward(x, params, cfg: LMConfig, *, positions, cache=None,
-                  decode=False, page_table=None, lengths=None):
+                  decode=False, page_table=None, lengths=None,
+                  prefix_len: int = 0):
     unit, n_units, rem = unit_structure(cfg)
     has_cache = cache is not None
     aux = _zeros_aux()
@@ -554,7 +634,7 @@ def stack_forward(x, params, cfg: LMConfig, *, positions, cache=None,
             x, nbc, a = apply_block(x, up[f"b{j}"], cfg, kind,
                                     positions=positions, cache=bc,
                                     decode=decode, page_table=page_table,
-                                    lengths=lengths)
+                                    lengths=lengths, prefix_len=prefix_len)
             new_uc[f"b{j}"] = nbc
             if "lb_loss" in a:
                 aux = aux + a["lb_loss"]
@@ -577,7 +657,8 @@ def stack_forward(x, params, cfg: LMConfig, *, positions, cache=None,
         bc = cache[f"rem{i}"] if has_cache else None
         x, nbc, a = apply_block(x, params[f"rem{i}"], cfg, kind,
                                 positions=positions, cache=bc, decode=decode,
-                                page_table=page_table, lengths=lengths)
+                                page_table=page_table, lengths=lengths,
+                                prefix_len=prefix_len)
         if has_cache:
             new_cache[f"rem{i}"] = nbc
         if "lb_loss" in a:
@@ -592,13 +673,20 @@ def _inputs_to_x(params, batch, cfg: LMConfig):
     return shard(x, "batch", None, None)
 
 
-def forward(params, batch, cfg: LMConfig, *, cache=None, decode=False):
+def forward(params, batch, cfg: LMConfig, *, cache=None, decode=False,
+            prefix_len: int = 0):
     """Returns (pre-head hidden states, new_cache, aux).
 
     With a paged cache, ``cache["pos"]`` is per-sequence (B,) — each row
     decodes at its own position; inactive rows (``pos < 0``) stay frozen.
     Ragged prefill takes ``batch["lengths"]`` (defaults to the padded
     length) and leaves ``pos = lengths`` per row.
+
+    ``prefix_len`` (static, paged prefill only): ``batch["tokens"]`` is
+    the TAIL of a prompt whose first ``prefix_len`` positions are already
+    cached in the rows' leading pages (prefix sharing) — positions start
+    at ``prefix_len``, attention runs the tail-over-cached-prefix path,
+    and ``pos`` lands at ``prefix_len + lengths``.
     """
     x = _inputs_to_x(params, batch, cfg)
     paged = cache is not None and "page_table" in cache
@@ -608,11 +696,12 @@ def forward(params, batch, cfg: LMConfig, *, cache=None, decode=False):
         positions = cache["pos"][:, None] if paged else \
             jnp.broadcast_to(cache["pos"], (x.shape[0], 1))
     else:
-        positions = jnp.broadcast_to(jnp.arange(x.shape[1]),
+        positions = jnp.broadcast_to(prefix_len + jnp.arange(x.shape[1]),
                                      (x.shape[0], x.shape[1]))
     x, new_cache, aux = stack_forward(x, params, cfg, positions=positions,
                                       cache=cache, decode=decode,
-                                      page_table=page_table, lengths=lengths)
+                                      page_table=page_table, lengths=lengths,
+                                      prefix_len=0 if decode else prefix_len)
     x = apply_norm(x, params["final_norm"], cfg.norm)
     if new_cache is not None:
         if paged:
@@ -620,10 +709,10 @@ def forward(params, batch, cfg: LMConfig, *, cache=None, decode=False):
                 new_cache["pos"] = jnp.where(cache["pos"] >= 0,
                                              cache["pos"] + 1, cache["pos"])
             else:
-                new_cache["pos"] = jnp.full(
-                    (x.shape[0],), x.shape[1], jnp.int32) \
-                    if lengths is None else \
-                    jnp.asarray(lengths, jnp.int32)
+                new_cache["pos"] = prefix_len + (jnp.full(
+                    (x.shape[0],), x.shape[1], jnp.int32)
+                    if lengths is None else
+                    jnp.asarray(lengths, jnp.int32))
         else:
             new_cache["pos"] = (cache["pos"] if cache else 0) + \
                 (1 if decode else x.shape[1])
@@ -667,16 +756,21 @@ def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None):
     return logits, cache
 
 
-def paged_prefill(params, batch, cfg: LMConfig, cache):
+def paged_prefill(params, batch, cfg: LMConfig, cache, *,
+                  prefix_len: int = 0):
     """Ragged prompt prefill into an existing paged cache.
 
     ``batch["tokens"]`` is (B, S) right-padded; ``batch["lengths"]`` (B,)
     gives each row's true prompt length (default S).  Pages named by
     ``cache["page_table"]`` must already be allocated for every row's
     prompt (see :mod:`repro.launch.engine`); pad positions write to the
-    trash page.  Returns (last-real-position logits (B, 1, V), cache).
+    trash page.  With ``prefix_len`` (static), tokens are the TAIL of a
+    prompt whose first ``prefix_len`` positions are already cached in the
+    rows' leading ``ceil(prefix_len / page_size)`` pages (prefix sharing).
+    Returns (last-real-position logits (B, 1, V), cache).
     """
-    x, cache, _ = forward(params, batch, cfg, cache=cache, decode=False)
+    x, cache, _ = forward(params, batch, cfg, cache=cache, decode=False,
+                          prefix_len=prefix_len)
     lengths = batch.get("lengths")
     if lengths is None:
         last = x[:, -1:]
@@ -684,6 +778,33 @@ def paged_prefill(params, batch, cfg: LMConfig, cache):
         idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, x.shape[1] - 1)
         last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
     return logits_fn(params, last, cfg), cache
+
+
+# Cache leaves indexed by PHYSICAL page id (shared across sequences), as
+# opposed to per-row leaves: the one list the admission view, the row
+# installer and the engine's copy-on-write page copy all special-case.
+POOL_KEYS = ("k_pages", "v_pages", "page_k_scale", "page_v_scale")
+
+
+def copy_page(cache, src: int, dst: int):
+    """Duplicate physical page ``src`` into ``dst`` across every pool leaf
+    (codes AND per-page scales, every attention layer) — the device half of
+    the engine's copy-on-write: the copied page keeps the grid it was
+    prefilled with, and the source page is never written again by the new
+    owner.  ``units`` subtrees carry a leading layer-stack axis."""
+    def walk(c, stacked):
+        out = {}
+        for key, leaf in c.items():
+            if isinstance(leaf, dict):
+                out[key] = walk(leaf, stacked or key == "units")
+            elif key in POOL_KEYS:
+                out[key] = leaf.at[:, dst].set(leaf[:, src]) if stacked \
+                    else leaf.at[dst].set(leaf[src])
+            else:
+                out[key] = leaf
+        return out
+
+    return walk(cache, False)
 
 
 def _admission_view(cache, w: int, page_table):
@@ -700,8 +821,8 @@ def _admission_view(cache, w: int, page_table):
         for key, leaf in c.items():
             if isinstance(leaf, dict):
                 out[key] = walk(leaf, stacked or key == "units")
-            elif key in ("k_pages", "v_pages"):
-                out[key] = leaf
+            elif key in POOL_KEYS:
+                out[key] = leaf                    # pool-indexed: shared
             elif stacked:
                 out[key] = jnp.zeros((leaf.shape[0], w) + leaf.shape[2:],
                                      leaf.dtype)
@@ -730,8 +851,8 @@ def _install_rows(cache, view, rows):
         for key, bleaf in big.items():
             if isinstance(bleaf, dict):
                 out[key] = walk(bleaf, small[key], stacked or key == "units")
-            elif key in ("k_pages", "v_pages"):
-                out[key] = small[key]
+            elif key in POOL_KEYS:
+                out[key] = small[key]              # pool-indexed: wholesale
             elif stacked:
                 out[key] = bleaf.at[:, rows].set(small[key])
             else:
@@ -745,7 +866,8 @@ def _install_rows(cache, view, rows):
     return out
 
 
-def admission_prefill(params, batch, cfg: LMConfig, cache, rows, page_table):
+def admission_prefill(params, batch, cfg: LMConfig, cache, rows, page_table,
+                      *, prefix_len: int = 0):
     """Batched ragged admission prefill straight into the shared page pools.
 
     ``batch["tokens"]`` (W, S) right-padded to one bucket with
@@ -758,12 +880,22 @@ def admission_prefill(params, batch, cfg: LMConfig, cache, rows, page_table):
     page-copy pass.  Per-sequence activation grids (core.api / dispatch /
     layers.attention) make every row bit-identical to a solo prefill of the
     same prompt at the same bucket, so a burst of W admissions costs ONE
-    forward instead of W without changing a single served token.  Returns
-    (last-real-position logits (W, 1, V), updated cache).
+    forward instead of W without changing a single served token.
+
+    ``prefix_len`` (static): the admissions' tokens are prompt TAILS whose
+    first ``prefix_len`` positions are already cached — each row's leading
+    logical pages map onto existing physical pages (shared, refcounted by
+    the engine), the tail attends them through their stored codes and
+    per-page scales, and only the tail's own pages are written.  A chunk-1
+    prefix prefill is itself just this call with ``prefix_len=0`` over the
+    prefix tokens, which is what makes a shared prefix bit-identical to a
+    privately prefilled one.  Returns (last-real-position logits (W, 1, V),
+    updated cache).
     """
     w = batch["tokens"].shape[0]
     view = _admission_view(cache, w, page_table)
-    logits, view = paged_prefill(params, batch, cfg, view)
+    logits, view = paged_prefill(params, batch, cfg, view,
+                                 prefix_len=prefix_len)
     return logits, _install_rows(cache, view, jnp.asarray(rows, jnp.int32))
 
 

@@ -403,6 +403,17 @@ def test_kernel_bench_json(tmp_path):
         assert adm[backend]["prefill_calls_serial"] == \
             adm[backend]["requests"]
         assert adm[backend]["burst_speedup"] > 0
+    # Prefix burst: N same-prefix admissions prefill the prefix once and
+    # consume (N-1)*P fewer pool pages than the unshared path.
+    for a in payload["paged"]["prefix"]["analytic"]:
+        assert a["shared_prefill_tokens"] < a["unshared_prefill_tokens"]
+        assert a["shared_pages_consumed"] < a["unshared_pages_consumed"]
+        assert a["admission_capacity_gain"] > 1.0
+    for backend in ("xla", "pallas"):
+        pb = payload["paged"]["prefix"]["burst"][backend]
+        assert pb["shared"]["prefix_prefills"] == 1
+        assert pb["unshared"]["prefix_prefills"] == 0
+        assert pb["pages_saved"] > 0
 
 
 @pytest.mark.smoke
@@ -423,3 +434,10 @@ def test_kernel_bench_check_guard(tmp_path):
     bad.write_text(json.dumps(tampered))
     with pytest.raises(SystemExit):
         kernel_bench.main(["--check", str(bad)])
+    # the prefix-burst analytics ride the same guard
+    tampered = json.loads(good.read_text())
+    tampered["paged"]["prefix"]["analytic"][0]["shared_pages_consumed"] -= 1
+    bad2 = tmp_path / "tampered_prefix.json"
+    bad2.write_text(json.dumps(tampered))
+    with pytest.raises(SystemExit):
+        kernel_bench.main(["--check", str(bad2)])

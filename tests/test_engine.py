@@ -1,10 +1,23 @@
-"""Continuous-batching engine: admission, eviction, recycling, isolation.
+"""Continuous-batching engine: admission, eviction, recycling, isolation —
+and prefix sharing on refcounted copy-on-write pages.
 
 The engine must serve a heterogeneous request stream through one
 fixed-shape jitted step: staggered prompt lengths, more requests than
 batch rows (admit-on-free), per-sequence EOS eviction, and page recycling
 across evict-then-readmit — with every request's greedy token stream
 identical to the same request served alone.
+
+Prefix sharing adds three more obligations, tested here:
+
+- the refcounted allocator never double-frees, never recycles a page with
+  ref > 0, and conserves ``free + live == num_pages`` under arbitrary
+  admit/evict/readmit interleavings (hypothesis property tests, plus a
+  seeded fallback so the invariants run even without hypothesis);
+- a sequence served on shared prefix pages is BIT-identical to the same
+  request served solo without sharing, on both kernel backends and at
+  kv_bits 8 and 4, including after one sharer's early eviction;
+- divergence inside a partially filled boundary page costs exactly ONE
+  CoW page copy (STATS) and never perturbs the donor's stream.
 """
 import jax
 import jax.numpy as jnp
@@ -13,8 +26,14 @@ import pytest
 
 from repro.core.api import QuantConfig, integerize_params
 from repro.kernels import dispatch
-from repro.launch.engine import PagedEngine, Request
+from repro.launch.engine import PageAllocator, PagedEngine, Request
 from repro.models import lm
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # optional dep: seeded tests below
+    HAVE_HYPOTHESIS = False
 
 
 def _setup(mode="int"):
@@ -236,3 +255,298 @@ def test_serve_json_reports_paged_dispatch(capsys):
     assert payload["engine_steps"] >= 1
     assert len(payload["per_seq"]) == 2
     assert all(s["gen"] == 2 for s in payload["per_seq"])
+
+
+# ---------------------------------------------------------------------------
+# Refcounted allocator: property tests (hypothesis + seeded fallback)
+# ---------------------------------------------------------------------------
+
+def _drive_allocator(ops, num_pages=16):
+    """Drive a PageAllocator through an admit/share/evict/misuse script.
+
+    ``ops`` is a list of (kind, arg) int pairs — the same encoding the
+    hypothesis strategy and the seeded fallback generate:
+
+      0: admit  — alloc up to ``arg`` fresh pages (a new holder)
+      1: share  — alias an existing holder's pages (prefix-style refcount
+                  bump; a second holder of the same physical pages)
+      2: evict  — release one holder's pages
+      3: evict twice — the second release MUST raise (double free)
+      4: share a freed page — MUST raise (no resurrection)
+
+    After every op the allocator invariants hold (``check()``): no page is
+    both live and free, the free list has no duplicates, and
+    ``free + live == num_pages``.  At the end every holder releases and
+    the free list refills completely.
+    """
+    alloc = PageAllocator(num_pages)
+    holders = []
+    for kind, arg in ops:
+        if kind == 0:
+            n = arg % (alloc.free_count + 1)
+            pages = alloc.alloc(n)
+            assert len(set(pages)) == n                # fresh + distinct
+            assert all(alloc.refs[p] == 1 for p in pages)
+            holders.append(pages)
+        elif kind == 1 and holders:
+            src = holders[arg % len(holders)]
+            alloc.share(src)
+            holders.append(list(src))
+        elif kind == 2 and holders:
+            alloc.release(holders.pop(arg % len(holders)))
+        elif kind == 3 and holders:
+            victim = holders.pop(arg % len(holders))
+            alloc.release(victim)
+            # a second release is a DOUBLE FREE once the page really hit
+            # ref 0 (still-aliased pages legally decrement instead)
+            if victim and alloc.refs[victim[0]] == 0:
+                with pytest.raises(RuntimeError, match="double free"):
+                    alloc.release(victim)
+        elif kind == 4 and alloc.free:
+            with pytest.raises(RuntimeError, match="dead page"):
+                alloc.share([alloc.free[arg % len(alloc.free)]])
+        alloc.check()
+        live = sum(1 for r in alloc.refs if r > 0)
+        assert alloc.free_count + live == num_pages
+    for h in holders:
+        alloc.release(h)
+    alloc.check()
+    assert alloc.free_count == num_pages               # nothing leaked
+
+
+def test_allocator_invariants_seeded():
+    """Seeded fallback for the hypothesis property: 400-op random scripts
+    across several seeds (runs even without hypothesis installed)."""
+    for seed in range(8):
+        rng = np.random.RandomState(seed)
+        ops = [(int(rng.randint(0, 5)), int(rng.randint(0, 1000)))
+               for _ in range(400)]
+        _drive_allocator(ops, num_pages=4 + seed * 3)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 1000)),
+                    max_size=120))
+    def test_allocator_invariants_hypothesis(ops):
+        """Property: random admit/share/evict/readmit sequences never
+        double-free, never recycle (or re-hand-out) a page with ref > 0,
+        and conserve free-count + live refs."""
+        _drive_allocator(ops)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; seeded fallback ran")
+    def test_allocator_invariants_hypothesis():
+        pass
+
+
+def test_engine_allocator_conserves_pages_with_registry():
+    """Engine-level conservation: after admit/evict/readmit churn with a
+    shared prefix, the allocator invariants hold and exactly the registry's
+    pinned pages stay off the free list."""
+    cfg, params = _setup()
+    rng = np.random.RandomState(3)
+    prefix = rng.randint(0, 64, 16).astype(np.int32)        # 2 pages (ps=8)
+    kw = dict(batch_size=2, max_len=64, page_size=8, prefill_buckets=(16,))
+    eng = PagedEngine(cfg, params, **kw)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [prefix, rng.randint(0, 64, 3 + i).astype(np.int32)]),
+                    max_new_tokens=2 + i % 2, prefix_len=16)
+            for i in range(4)]
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    eng.alloc.check()
+    pinned = sum(len(e.pages) for e in eng.prefix_registry.values())
+    assert pinned == 2                                      # one 2-page entry
+    assert eng.alloc.free_count == eng.num_pages - pinned
+    assert eng.prefix_prefills == 1
+    assert eng.shared_prefix_hits == 3
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: bit-parity, CoW, acceptance
+# ---------------------------------------------------------------------------
+
+def _prefix_reqs(prefix, tails, max_new, prefix_len=None):
+    return [Request(rid=i, prompt=np.concatenate([prefix, t]),
+                    max_new_tokens=max_new[i] if isinstance(max_new, list)
+                    else max_new,
+                    prefix_len=len(prefix) if prefix_len is None
+                    else prefix_len)
+            for i, t in enumerate(tails)]
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_shared_prefix_bit_identical_to_solo(backend, kv_bits):
+    """Satellite: a sequence served on SHARED prefix pages produces tokens
+    bit-identical to the same request served solo with private pages (cold
+    registry -> it prefills its own prefix), on both backends and at
+    kv_bits 8/4 — including the donor's continuation AFTER the sharer's
+    early eviction freed its refs mid-run."""
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=kv_bits,
+                     mode="int")
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    rng = np.random.RandomState(7)
+    prefix = rng.randint(0, 64, 16).astype(np.int32)        # page-aligned
+    tails = [rng.randint(0, 64, n).astype(np.int32) for n in (6, 4)]
+    kw = dict(batch_size=2, max_len=48, page_size=8, prefill_buckets=(16,))
+    with dispatch.use_backend(backend):
+        eng = PagedEngine(cfg, params, **kw)
+        # sharer (rid 1) evicts after 2 tokens; donor continues to 5
+        reqs = _prefix_reqs(prefix, tails, max_new=[5, 2])
+        eng.run(reqs)
+        assert eng.prefix_prefills == 1
+        assert eng.shared_prefix_hits == 1
+        for r, t in zip(reqs, tails):
+            solo = PagedEngine(cfg, params, **kw)
+            probe = Request(rid=9, prompt=np.concatenate([prefix, t]),
+                            max_new_tokens=r.max_new_tokens, prefix_len=16)
+            solo.run([probe])
+            assert r.tokens == probe.tokens, (r.rid, r.tokens, probe.tokens)
+
+
+def test_cow_boundary_single_copy_donor_unchanged():
+    """Satellite: a breakpoint INSIDE a page — the sharer triggers exactly
+    one CoW page copy (STATS), its tokens still match its solo run
+    bitwise, and the donor's subsequent tokens are unchanged."""
+    cfg, params = _setup()
+    rng = np.random.RandomState(11)
+    prefix = rng.randint(0, 64, 12).astype(np.int32)   # ps=8: 1 full + 4
+    tails = [rng.randint(0, 64, 6).astype(np.int32) for _ in range(2)]
+    kw = dict(batch_size=2, max_len=48, page_size=8, prefill_buckets=(16,))
+    dispatch.reset_stats()
+    eng = PagedEngine(cfg, params, **kw)
+    reqs = _prefix_reqs(prefix, tails, max_new=5, prefix_len=12)
+    eng.run(reqs)
+    assert dispatch.STATS["cow_page_copies"] == 1      # exactly one copy
+    eng.alloc.check()
+    for r, t in zip(reqs, tails):
+        solo = PagedEngine(cfg, params, **kw)
+        probe = Request(rid=9, prompt=np.concatenate([prefix, t]),
+                        max_new_tokens=5, prefix_len=12)
+        solo.run([probe])
+        assert r.tokens == probe.tokens, (r.rid, r.tokens, probe.tokens)
+
+
+@pytest.mark.smoke
+def test_shared_prefix_acceptance_one_prefill_and_page_accounting():
+    """Acceptance: W admissions sharing a P-page prefix perform exactly 1
+    prefix prefill (prefix_prefills counter), occupy exactly
+    sum(worst-case pages) - (W-1)*P distinct pool pages, and every served
+    token stream is bit-identical to the same request served solo without
+    sharing (fresh engine, cold registry)."""
+    cfg, params = _setup()
+    rng = np.random.RandomState(5)
+    ps, plen = 8, 16
+    p_pages = plen // ps                                        # P = 2
+    prefix = rng.randint(0, 64, plen).astype(np.int32)
+    tails = [rng.randint(0, 64, n).astype(np.int32) for n in (7, 5, 3)]
+    w = len(tails)
+    kw = dict(batch_size=w, max_len=64, page_size=ps, prefill_buckets=(16,))
+    eng = PagedEngine(cfg, params, **kw)
+    reqs = _prefix_reqs(prefix, tails, max_new=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                                      # one drain admits all W
+    assert eng.prefix_prefills == 1                 # THE acceptance counter
+    assert eng.prefill_calls == 2                   # 1 prefix + 1 tail batch
+    need = [-(-(len(r.prompt) + r.max_new_tokens) // ps) for r in reqs]
+    in_use = eng.num_pages - eng.alloc.free_count
+    assert in_use == sum(need) - (w - 1) * p_pages  # (W-1)*P pages saved
+    eng.run()
+    shared_toks = [list(r.tokens) for r in reqs]
+    for r, t, toks in zip(reqs, tails, shared_toks):
+        solo = PagedEngine(cfg, params, **kw)
+        probe = Request(rid=9, prompt=np.concatenate([prefix, t]),
+                        max_new_tokens=4, prefix_len=plen)
+        solo.run([probe])
+        assert toks == probe.tokens, (r.rid, toks, probe.tokens)
+
+
+def test_registry_reclaims_cold_prefix_under_pool_pressure():
+    """A pinned-but-unused registry entry must not starve admissions: when
+    the pool runs dry the LRU entry's pin is released, its pages recycle,
+    and the new (unshared) request serves exactly as solo."""
+    cfg, params = _setup()
+    rng = np.random.RandomState(13)
+    prefix = rng.randint(0, 64, 16).astype(np.int32)
+    kw = dict(batch_size=1, max_len=32, page_size=8, prefill_buckets=(16,),
+              num_pages=4)                          # exactly one row's worth
+    eng = PagedEngine(cfg, params, **kw)
+    donor = Request(rid=0, prompt=np.concatenate(
+        [prefix, rng.randint(0, 64, 3).astype(np.int32)]),
+        max_new_tokens=2, prefix_len=16)
+    eng.run([donor])
+    assert len(eng.prefix_registry) == 1
+    assert eng.alloc.free_count == eng.num_pages - 2    # 2 pages pinned
+    plain = Request(rid=1, prompt=rng.randint(0, 64, 14).astype(np.int32),
+                    max_new_tokens=4)               # needs 3 pages > 2 free
+    eng.run([plain])
+    assert not eng.prefix_registry                  # LRU entry reclaimed
+    assert plain.done and not plain.failed
+    eng.alloc.check()
+    solo = PagedEngine(cfg, params, **kw)
+    probe = Request(rid=9, prompt=plain.prompt, max_new_tokens=4)
+    solo.run([probe])
+    assert plain.tokens == probe.tokens
+
+
+def test_sharing_gated_off_for_recurrent_patterns():
+    """Prefix sharing requires an attention-only block pattern (recurrent
+    blocks would need their boundary states registered): hybrid configs
+    serve declared prefixes UNSHARED instead of mis-serving them."""
+    cfg, params = _setup()
+    hybrid = cfg.replace(block_pattern=("attn", "rglru"), d_rnn=48)
+    eng = PagedEngine(hybrid, lm.init_params(jax.random.PRNGKey(1), hybrid),
+                      **ENGINE_KW)
+    assert not eng.sharing_enabled
+    req = Request(rid=0, prompt=np.arange(12, dtype=np.int32), prefix_len=8)
+    assert eng._effective_prefix(req) == 0          # served without sharing
+    attn_only = PagedEngine(cfg, params, **ENGINE_KW)
+    assert attn_only.sharing_enabled
+    assert attn_only._effective_prefix(req) == 8
+
+
+def test_pending_cow_source_survives_same_drain_reclaim():
+    """Regression: a sharer's deferred CoW copy must read the DONOR's
+    boundary page even when pool pressure reclaims the registry entry in
+    the same drain and a new donor's chunk-1 would otherwise grab (and
+    overwrite) that physical page before the copy runs.  The pendency ref
+    taken at admission keeps the source page alive until the copy."""
+    cfg, params = _setup()
+    rng = np.random.RandomState(17)
+    prefA = rng.randint(0, 64, 12).astype(np.int32)    # 1 full + partial(4)
+    prefB = rng.randint(0, 64, 12).astype(np.int32)    # a different prefix
+    tailD = rng.randint(0, 64, 2).astype(np.int32)
+    tailS = rng.randint(0, 64, 6).astype(np.int32)
+    tailR = rng.randint(0, 64, 2).astype(np.int32)
+    kw = dict(batch_size=2, max_len=32, page_size=8, prefill_buckets=(16,),
+              num_pages=5)
+    eng = PagedEngine(cfg, params, **kw)
+    donor = Request(rid=0, prompt=np.concatenate([prefA, tailD]),
+                    max_new_tokens=2, prefix_len=12)   # 2 pages, then gone
+    eng.run([donor])
+    assert len(eng.prefix_registry) == 1
+    assert eng.alloc.free_count == 3                   # 2 pinned
+    # One drain: sharer S (hits A, CoW pending, 2 fresh of the 3 free) +
+    # new-prefix donor R (needs 2 fresh > 1 free -> reclaims A's entry;
+    # without the pendency ref, A's partial page would recycle into R's
+    # prefix pages and R's chunk-1 would overwrite it BEFORE S's copy).
+    sharer = Request(rid=1, prompt=np.concatenate([prefA, tailS]),
+                     max_new_tokens=3, prefix_len=12)
+    presser = Request(rid=2, prompt=np.concatenate([prefB, tailR]),
+                      max_new_tokens=2, prefix_len=12)
+    eng.run([sharer, presser])
+    assert all(r.done and not r.failed for r in (sharer, presser))
+    eng.alloc.check()
+    for r in (sharer, presser):
+        solo = PagedEngine(cfg, params, **kw)
+        probe = Request(rid=9, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens, prefix_len=12)
+        solo.run([probe])
+        assert r.tokens == probe.tokens, (r.rid, r.tokens, probe.tokens)

@@ -342,7 +342,9 @@ def test_paged_write_prefill_matches_ragged_write_oracle():
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     cache = {"k_pages": jnp.zeros((npg + 1, hkv, ps, d), jnp.int8),
              "v_pages": jnp.zeros((npg + 1, hkv, ps, d), jnp.int8),
-             "k_scale": jnp.ones((b,)), "v_scale": jnp.ones((b,))}
+             "k_scale": jnp.ones((b,)), "v_scale": jnp.ones((b,)),
+             "page_k_scale": jnp.ones((npg + 1,)),
+             "page_v_scale": jnp.ones((npg + 1,))}
     qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=8, mode="int")
     new = _paged_write_prefill(cache, k, v, positions, lengths, pt, "int",
                                qc)
@@ -373,3 +375,96 @@ def test_paged_cache_per_sequence_scales():
         params, {"tokens": toks, "lengths": jnp.asarray([8, 3])}, cfg, cache)
     ks = np.asarray(cache["units"]["b0"]["k_scale"])[0]
     assert ks[0] != ks[1]                       # calibrated per sequence
+
+
+# ---------------------------------------------------------------------------
+# Per-physical-page scale resolution (prefix sharing)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 10])
+def test_paged_kernel_page_scale_resolution_matches_oracle(window):
+    """With (num_pages,) per-page k/v scale pools, the kernel dequantizes
+    every page on ITS OWN stored grid — bit-matching the streamed oracle's
+    per-key factor expansion, holes and staggered rows included."""
+    hkv, g, d, ps, npg = 2, 4, 32, 8, 10
+    pt = jnp.asarray([[0, 1, 2, -1], [3, 4, -1, -1], [5, 6, 7, 8]],
+                     jnp.int32)
+    kp, vp = _pools(npg, hkv, ps, d, seed=31)
+    q = jax.random.randint(jax.random.PRNGKey(4), (3, hkv, g, d), -8,
+                           8).astype(jnp.int8)
+    pos = jnp.asarray([19, 9, 33])
+    sc = jnp.asarray([0.02, 0.05, 0.03])             # per-row q-side scale
+    vs = jnp.ones((3,))
+    kps = 0.01 + 0.005 * jnp.arange(npg, dtype=jnp.float32)
+    vps = 0.02 + 0.003 * jnp.arange(npg, dtype=jnp.float32)
+    out = int_paged_decode_attention(q, kp, vp, sc, vs, pt, pos,
+                                     k_page_scale=kps, v_page_scale=vps,
+                                     window=window)
+    want = ref.int_paged_decode_attention_ref(
+        q, kp, vp, sc, vs, pt, pos, bk=ps, k_page_scale=kps,
+        v_page_scale=vps, window=window)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_paged_attention_backend_bit_parity_page_scales():
+    """paged_attention with per-page scale pools: Pallas == XLA gather
+    fallback, bitwise — the prefix-sharing read path never depends on the
+    backend toggle."""
+    b, hq, hkv, d, ps = 3, 4, 2, 16, 8
+    pt, used = _tables([12, 30, 3], ps, 5)
+    kp, vp = _pools(used + 1, hkv, ps, d, seed=33)
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, hq, 1, d))
+    pos = jnp.asarray([12, 30, 3])
+    ones = jnp.ones((b,))
+    kps = 0.05 + 0.01 * jnp.arange(used + 1, dtype=jnp.float32)
+    vps = 0.04 + 0.02 * jnp.arange(used + 1, dtype=jnp.float32)
+    cfg = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
+    spec = AttnSpec(causal=True)
+    a_xla = paged_attention(q, kp, vp, ones, ones, pt, pos, spec, cfg,
+                            k_page_scale=kps, v_page_scale=vps)
+    with dispatch.use_backend("pallas"):
+        a_pal = paged_attention(q, kp, vp, ones, ones, pt, pos, spec, cfg,
+                                k_page_scale=kps, v_page_scale=vps)
+    np.testing.assert_array_equal(np.asarray(a_pal, np.float32),
+                                  np.asarray(a_xla, np.float32))
+
+
+def test_paged_write_prefill_registers_page_scales():
+    """Prefill must register the row's grid on EVERY allocated page —
+    including reserved-but-unwritten decode pages — while leaving pages
+    before the prefix boundary (shared prefix / CoW boundary) on the grid
+    their prefix chunk registered."""
+    from repro.models.lm import _paged_write_prefill
+    b, hkv, s, d, ps, npg = 1, 2, 8, 8, 4, 7
+    key = jax.random.PRNGKey(2)
+    k = jax.random.normal(key, (b, hkv, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, s, d))
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=8, mode="int")
+    prefix_scale = 0.123
+    cache = {"k_pages": jnp.zeros((npg + 1, hkv, ps, d), jnp.int8),
+             "v_pages": jnp.zeros((npg + 1, hkv, ps, d), jnp.int8),
+             "k_scale": jnp.ones((b,)), "v_scale": jnp.ones((b,)),
+             "page_k_scale": jnp.full((npg + 1,), prefix_scale),
+             "page_v_scale": jnp.full((npg + 1,), prefix_scale)}
+    # row: pages [0 (prefix, protected), 1 (tail), 2 (reserved for decode)]
+    pt = jnp.asarray([[0, 1, 2]], jnp.int32)
+    # prefix_len=6 -> boundary inside page 1?  No: ceil(6/4)=2, so page 0
+    # AND the partial boundary page 1 keep the prefix grid; page 2 is owned.
+    positions = jnp.broadcast_to(6 + jnp.arange(s), (b, s))
+    new = _paged_write_prefill(cache, k, v, positions, jnp.asarray([5]),
+                               pt, "int", qc, prefix_len=6)
+    pks = np.asarray(new["page_k_scale"])
+    assert pks[0] == np.float32(prefix_scale)       # full prefix page kept
+    assert pks[1] == np.float32(prefix_scale)       # CoW boundary page kept
+    assert pks[2] == np.asarray(new["k_scale"])[0]  # owned page registered
+    # codes inside the boundary page were emitted on ITS grid, the owned
+    # page's on the row's fresh grid
+    kq = np.asarray(new["k_pages"])
+    kf = np.asarray(k)
+    want_boundary = np.clip(np.round(kf[0, :, 0] / prefix_scale),
+                            -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(kq[1, :, 6 % 4], want_boundary)
+    own_scale = float(np.asarray(new["k_scale"])[0])
+    want_own = np.clip(np.round(kf[0, :, 2] / own_scale),
+                       -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(kq[2, :, 0], want_own)
