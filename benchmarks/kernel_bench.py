@@ -65,6 +65,13 @@ PREFIX_SHAPES = [
     (8, 2048, 128, 128, 8, 128, 4),
     (32, 8192, 256, 128, 8, 128, 8),     # long shared context, many tenants
 ]
+# (prompt_tokens, tokens_generated_at_preemption, max_new_tokens,
+#  page_size, hkv, d, kv_bits)
+PREEMPT_SHAPES = [
+    (2048, 64, 256, 128, 8, 128, 8),     # preempted early in generation
+    (2048, 64, 256, 128, 8, 128, 4),
+    (8192, 192, 256, 128, 8, 128, 8),    # long context, deep into decode
+]
 
 
 def _time(f, *args, n=20):
@@ -203,6 +210,40 @@ def prefix_burst_analytic(n, prefix, tail, page_size, hkv, d, kv_bits):
         "shared_kv_bytes_written": int(shared_pages * page_bytes),
         "pages_saved": unshared_pages - shared_pages,
         "admission_capacity_gain": unshared_pages / max(shared_pages, 1),
+    }
+
+
+def preempt_resume_analytic(prompt, gen, max_new, page_size, hkv, d,
+                            kv_bits):
+    """Victim preemption economics: pages recovered per preemption vs the
+    recompute bill of the bit-exact resume.
+
+    Preempting a victim returns its whole worst-case reservation
+    (``ceil((prompt + max_new)/ps)`` pages; shared prefix pages would stay
+    pinned — this is the conservative unshared bound).  The resume
+    re-prefills the PROMPT (one admission prefill, a pure function of the
+    prompt so codes/scales land bit-identically) and replays the ``gen``
+    already-generated tokens through the ordinary decode step — so the
+    KV bytes rewritten per attention layer are exactly the bytes the
+    victim held, and the token bill is ``prompt + gen`` with zero new
+    sampling work.  Fields here are shape-derived lower bounds, guarded by
+    --check (a scheme change that rewrites more bytes or recomputes more
+    tokens per preemption is a regression).
+    """
+    unit = kv_bits / 8
+    pages = -(-(prompt + max_new) // page_size)
+    tok_bytes = 2 * hkv * d * unit               # K + V, one token, 1 layer
+    return {
+        "prompt": prompt, "gen": gen, "max_new": max_new,
+        "page_size": page_size, "hkv": hkv, "d": d, "kv_bits": kv_bits,
+        "pages_recovered_per_preemption": pages,
+        "resume_recompute_tokens": prompt + gen,
+        "resume_replay_steps": gen,
+        "resume_kv_bytes_rewritten": int((prompt + gen) * tok_bytes),
+        "steal_bytes_freed": int(pages * page_size * tok_bytes),
+        # recompute bytes per freed byte: < 1 means preemption is cheaper
+        # than the capacity it returns (it always is while gen << max_len)
+        "rewrite_per_freed_byte": (prompt + gen) / (pages * page_size),
     }
 
 
@@ -361,6 +402,80 @@ def prefix_burst(quick=False):
     return res
 
 
+def preempt_loop(quick=False):
+    """Timed victim preemption + bit-exact resume under both backends.
+
+    A victim decodes on a pool sized for exactly one tenant; a
+    high-priority arrival forces the engine to preempt it (steal latency =
+    the drain that evicts the victim and admits the newcomer, measured on
+    the host — it is pure allocator work plus the newcomer's prefill).
+    After the newcomer finishes the victim readmits: one prompt
+    re-prefill plus recorded-token replay through the shared decode step.
+    ``bit_identical`` asserts the acceptance bar (resumed stream ==
+    uninterrupted run); pages_recovered and the resume token bill are the
+    measured counterparts of ``preempt_resume_analytic``.
+    """
+    import numpy as np
+
+    from repro.kernels import dispatch
+    from repro.launch.engine import PagedEngine, Request
+
+    cfg, params = _bench_lm()
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab, 16).astype(np.int32)
+    hi_prompt = rng.randint(0, cfg.vocab, 16).astype(np.int32)
+    gen = 6 if quick else 8                  # victim still mid-flight when
+    steps_before = 2 if quick else 3         # the high-priority rival lands
+    kw = dict(batch_size=2, max_len=32, page_size=8, prefill_buckets=(16,))
+
+    res = {}
+    for backend in ("xla", "pallas"):
+        with dispatch.use_backend(backend):
+            dispatch.reset_stats()
+            base = PagedEngine(cfg, params, **kw)
+            probe = Request(rid=0, prompt=prompt, max_new_tokens=gen)
+            base.run([probe])                   # warm traces + baseline
+
+            # 3 pages = one (16 + 8)/8 tenant: admission MUST preempt.
+            eng = PagedEngine(cfg, params, **{**kw, "num_pages": 3},
+                              preempt_after_steps=1)
+            eng._step = base._step
+            eng._admit_prefill = base._admit_prefill
+            victim = Request(rid=1, prompt=prompt, max_new_tokens=gen)
+            eng.submit(victim)
+            for _ in range(steps_before):
+                eng.step()
+            held = sum(len(p) for p in eng.row_pages)
+            assert held > 0 and not victim.done   # genuinely mid-flight
+            hi = Request(rid=2, prompt=hi_prompt, max_new_tokens=2,
+                         priority=5)
+            eng.submit(hi)
+            t0 = time.perf_counter()
+            eng._drain_queue()                  # preempt + admit + prefill
+            jax.block_until_ready(eng.cache)
+            steal_s = time.perf_counter() - t0
+            replay = len(victim.tokens)
+            t0 = time.perf_counter()
+            while eng.step():
+                pass
+            resume_s = time.perf_counter() - t0
+            assert victim.done and hi.done
+            res[backend] = {
+                "preemptions": eng.preempt_count,
+                "resumes": eng.resume_count,
+                # no sharing here: the whole reservation comes back
+                "pages_recovered": held,
+                "steal_latency_ms": steal_s * 1e3,
+                "resume_recompute_tokens": len(prompt) + replay,
+                "resume_replay_steps": replay,
+                "resume_s": resume_s,
+                "bit_identical": victim.tokens == probe.tokens,
+                "stats": {k: dispatch.STATS[k]
+                          for k in ("preemptions", "resumes")},
+            }
+    return res
+
+
 def paged_loop(quick=False):
     """Timed multi-tenant continuous-batching loop under both backends.
 
@@ -495,6 +610,14 @@ def run(quick=False):
                          for sh in PREFIX_SHAPES],
             "burst": prefix_burst(quick=quick),
         },
+        # failure handling: pages recovered per victim preemption vs the
+        # bit-exact resume recompute bill, analytic + timed on both
+        # backends (steal latency, replay cost, parity flag).
+        "preemption": {
+            "analytic": [preempt_resume_analytic(*sh)
+                         for sh in PREEMPT_SHAPES],
+            "loop": preempt_loop(quick=quick),
+        },
     }
     return rows, design, decode, paged
 
@@ -510,6 +633,7 @@ GUARDED_DECODE = ("pallas_bytes_per_step", "pallas_bytes_per_step_wrapped",
 GUARDED_PAGED = ("paged_bytes_per_step", "paged_macs_per_step")
 GUARDED_PREFIX = ("shared_prefill_tokens", "shared_pages_consumed",
                   "shared_kv_bytes_written")
+GUARDED_PREEMPT = ("resume_recompute_tokens", "resume_kv_bytes_rewritten")
 
 
 def analytic_payload():
@@ -521,7 +645,9 @@ def analytic_payload():
         "paged": {"analytic": [paged_step_analytic(*sh)
                                for sh in PAGED_SHAPES],
                   "prefix": {"analytic": [prefix_burst_analytic(*sh)
-                                          for sh in PREFIX_SHAPES]}},
+                                          for sh in PREFIX_SHAPES]},
+                  "preemption": {"analytic": [preempt_resume_analytic(*sh)
+                                              for sh in PREEMPT_SHAPES]}},
     }
 
 
@@ -565,6 +691,16 @@ def check_regressions(cur, prev):
         for k in GUARDED_PREFIX:
             if old and e[k] > old[k]:
                 regs.append(f"prefix[n={e['n']},prefix={e['prefix']}]."
+                            f"{k}: {old[k]} -> {e[k]}")
+    mkey = ("prompt", "gen", "max_new", "page_size", "kv_bits")
+    prev_m = by_key(prev.get("paged", {}).get("preemption", {})
+                    .get("analytic", []), mkey)
+    for e in cur["paged"]["preemption"]["analytic"]:
+        old = prev_m.get(tuple(str(e[f]) for f in mkey))
+        for k in GUARDED_PREEMPT:
+            if old and e[k] > old[k]:
+                regs.append(f"preemption[prompt={e['prompt']},"
+                            f"gen={e['gen']},kv={e['kv_bits']}]."
                             f"{k}: {old[k]} -> {e[k]}")
     return regs
 
@@ -650,6 +786,21 @@ def main(argv=None):
               f"unshared={r['unshared']['drain_s'] * 1e3:.1f}ms"
               f"(pages={r['unshared']['pages_in_use']}),"
               f"pages_saved={r['pages_saved']}")
+    for a in paged["preemption"]["analytic"]:
+        print(f"preempt_resume,prompt={a['prompt']},gen={a['gen']},"
+              f"kv_bits={a['kv_bits']},"
+              f"pages_recovered={a['pages_recovered_per_preemption']},"
+              f"recompute_tokens={a['resume_recompute_tokens']},"
+              f"kv_bytes_rewritten={a['resume_kv_bytes_rewritten']},"
+              f"rewrite_per_freed_byte="
+              f"{a['rewrite_per_freed_byte']:.3f}")
+    for backend, r in paged["preemption"]["loop"].items():
+        print(f"preempt_loop[{backend}],"
+              f"pages_recovered={r['pages_recovered']},"
+              f"steal={r['steal_latency_ms']:.1f}ms,"
+              f"resume_tokens={r['resume_recompute_tokens']}"
+              f"(replay={r['resume_replay_steps']}),"
+              f"bit_identical={r['bit_identical']}")
 
     if args.json:
         payload = {"kernels": rows, "attention_design": design,

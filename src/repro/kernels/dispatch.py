@@ -96,6 +96,16 @@ STATS = {"qlinear_pallas": 0, "qlinear_xla": 0,
          # allocator on the first divergent write into a shared partial
          # page — one copy per sharer, ever)
          "cow_page_copies": 0,
+         # failure-handling counters, bumped by the serving engine
+         # (launch/engine.py) and surfaced by the serve CLI report:
+         # victim preemptions (incl. NaN quarantines), bit-exact resume
+         # readmissions, cancelled / expired-while-queued requests,
+         # EMA-watchdog straggler fires, engine-audit failures, steps
+         # served through the forced pallas->XLA fallback twin, and rows
+         # quarantined for non-finite logits.
+         "preemptions": 0, "resumes": 0, "cancelled": 0, "expired": 0,
+         "watchdog_fires": 0, "audit_failures": 0, "forced_xla_steps": 0,
+         "quarantined": 0,
          # chosen tile sizes per (op, shape) — the baseline the future
          # measured autotuner (ROADMAP) diffs against; serialized by
          # kernel_bench --json and the serve CLI report.

@@ -23,66 +23,107 @@ Page-table layout (see also :func:`repro.models.lm.init_paged_cache`)::
 
 The engine owns the page allocator on the host: a REFCOUNTED free list of
 physical page ids (:class:`PageAllocator`) plus host mirrors of
-``pos``/``page_table``.  Device and host stay in sync without readbacks
-because the jitted step advances ``pos`` deterministically (+1 per active
-row).  Admitting a request onto shared pages bumps their refcounts,
-eviction decrements, and a page recycles onto the free list only at
-ref == 0 — so a prefix owner's eviction never yanks pages out from under
-its sharers.
+``pos``/``page_table``.  Admitting a request onto shared pages bumps
+their refcounts, eviction decrements, and a page recycles onto the free
+list only at ref == 0.  Prefix sharing (declared cache breakpoints,
+``Request.prefix_len``) aliases registered prefix pages across requests
+with copy-on-write at a mid-page boundary; see :class:`PrefixEntry` and
+the PR-5 notes in ``CHANGES.md`` for the sharing machinery.
 
-Scheduling policy (deliberately simple, deterministic):
+Request state machine
+=====================
 
-- FIFO admission: a queued request is admitted when (a) a batch row is
-  free and (b) the free list holds its WORST-CASE page count,
-  ``ceil((prompt_len + max_new) / page_size)``.  All of those pages are
-  reserved (allocated into the page table) at admission, so a running
-  sequence can never starve mid-flight and admission never deadlocks.
-  Prompts longer than the largest prefill bucket are REJECTED up front
-  (``Request.error`` records why) instead of crashing the serve loop.
-- Batched admission prefill: each ``step()`` first DRAINS every admittable
-  queued request, then runs ONE :func:`repro.models.lm.admission_prefill`
-  per prompt bucket — the admissions' KV codes land directly in the shared
-  page pools at their reserved physical ids (no private batch=1 cache, no
-  page-copy pass), so a burst of N same-bucket arrivals costs one prefill
-  instead of N and stalls running tenants once, not N times.  Trace count
-  stays bounded: one per (bucket, admission-batch-width).  Per-sequence
-  activation grids keep every admitted row bit-identical to its solo
-  prefill; ``prefill_calls`` counts the batched launches for tests/bench.
-- Per-sequence EOS: a row finishes on its own ``eos_id`` or
-  ``max_new_tokens``; it is evicted immediately (pos := -1, pages back on
-  the free list) and the next queued request can take the row that same
-  step.  Finished rows are never decoded.
+Every request moves through ``Request.status``::
 
-Prefix sharing / copy-on-write (this PR's tentpole): a request may declare
-a prompt-prefix cache breakpoint (``Request.prefix_len``, page-rounded
-down to ``len(prompt) - 1``).  Prompts then prefill in TWO chunks split at
-the breakpoint — the prefix chunk is a pure function of the prefix tokens,
-so its pages (immutable quantized codes + per-page scales, see
-:func:`repro.models.lm.init_paged_cache`) are registered in a prefix
-REGISTRY keyed by the hash of the prefix's token blocks.  A later request
-declaring the same prefix maps its leading logical pages onto those SAME
-physical pages (refcounted; the registry itself holds a pinning ref so
-entries survive their donor's eviction) and prefills only its divergent
-tail, attending the prefix through the cached codes on the owner's
-per-page scales.  Because both the prefix chunk and the tail chunk are
-deterministic pure functions, a sharer's served tokens are BIT-IDENTICAL
-to the same request served solo without sharing (which computes the same
-two chunks privately).  When the breakpoint falls inside a page, the
-partially filled boundary page is COPIED once at admission
-(copy-on-write; ``STATS["cow_page_copies"]``) so the sharer's tail writes
-never touch the donor's page.  Worst-case reservation counts only FRESH
-pages for sharers, so a W-way shared P-page prefix costs 1 prefix prefill
-+ W tail prefills and (W - 1) * P fewer pool pages.  Under pool pressure,
-cold registry entries are reclaimed LRU-first (their pin released; pages
-recycle once no running row holds them).  Sharing requires an
-attention-only ``block_pattern`` (recurrent blocks would need their
-prefix-boundary states registered too) — other patterns serve unshared.
+    QUEUED ──admit──> RUNNING ──EOS / max_new──────────> DONE
+      │  ▲              │
+      │  └─requeue──────┤ victim preemption / NaN quarantine
+      │     (capped       (pages released; recompute re-enters the
+      │      backoff)      admission path; > max_preemptions -> REJECTED)
+      │                 │
+      ├─ttl/deadline──> TIMED_OUT      (expired while queued)
+      ├─cancel────────> CANCELLED      (queued or mid-flight; pages freed)
+      ├─impossible────> REJECTED       (over bucket / page table / pool)
+      └─shutdown──────> PREEMPTED      (graceful drain: partial output kept)
+
+Failure semantics
+=================
+
+- **Victim preemption with bit-exact resume.**  When admission stalls
+  under pool pressure (``can_admit`` false after the registry LRU reclaim
+  in :meth:`PagedEngine._reclaim_one` is exhausted), the engine preempts
+  a victim row: the lowest-priority (tie: youngest) running request whose
+  priority is below the blocked request's — or, after the blocked request
+  has waited ``preempt_after_steps``, at most equal to it.  The victim's
+  pages are released through the refcounted allocator (shared prefix
+  pages keep their registry pins) and the request is re-enqueued as a
+  *recompute*: on readmission it re-enters the ordinary
+  :func:`repro.models.lm.admission_prefill` / prefix-registry path for
+  its prompt — a pure function of the prompt tokens, so codes and page
+  scales land bit-identically — and then REPLAYS its already-generated
+  tokens through the shared jitted decode step (``Request._replay``:
+  recorded tokens are fed back instead of sampled, with the recomputed
+  argmax cross-checked).  Each replay step is the same pure function of
+  (token, position, page grids) as the original decode step, so the
+  rebuilt KV codes — and every token generated after resume — are
+  BIT-IDENTICAL to an uninterrupted run, on both backends, at kv_bits 8
+  and 4.  Replay shares the batch with live decode: resuming costs the
+  resumed row's prefill plus ``len(tokens)`` piggybacked decode steps,
+  never a dedicated launch.  Readmission backs off exponentially
+  (``2^(preemptions-1)`` steps, capped at ``backoff_cap``) and a request
+  preempted more than ``max_preemptions`` times is terminally REJECTED —
+  so preemption can thrash neither the pool nor the queue.
+- **Deadlines, TTL, cancellation.**  ``Request.deadline_s`` (wall clock
+  since first submit) and ``Request.ttl_steps`` (engine steps since the
+  latest (re)queue) expire requests *while queued* — an unservable queue
+  can therefore never stall decode.  :meth:`Request.cancel` (or
+  :meth:`PagedEngine.cancel`) takes effect at the next step: a queued
+  request is dropped, a running one releases its row and pages
+  mid-flight.  Requests that can NEVER be admitted (prompt over the
+  largest prefill bucket, worst-case pages over the page-table row or the
+  whole pool) are rejected up front with ``Request.error`` instead of
+  blocking the queue head forever.
+- **NaN / overflow quarantine.**  After every step the engine checks each
+  active row's logits for finiteness (the dequant epilogue is the one
+  place integer serving can overflow).  A non-finite row is QUARANTINED:
+  its pages are released and the request re-enters the queue as the same
+  bit-exact recompute as a preemption victim — one poisoned row never
+  corrupts its own stream (the bad token is discarded, never appended)
+  nor its batch neighbours.  Repeated quarantine falls under the same
+  ``max_preemptions`` cap.
+- **Watchdog.**  Every decode step runs inside a per-step wall-time EMA
+  watchdog (:mod:`repro.runtime.watchdog`); sustained stragglers bump
+  ``STATS["watchdog_fires"]``.
+- **Invariant auditing.**  :meth:`PagedEngine.audit` extends
+  :meth:`PageAllocator.audit` into an engine-wide cross-check: free+live
+  page conservation, per-page refcounts == row holders + registry pins +
+  CoW pendency refs + fault holds, host page-table/pos mirrors vs. row
+  state, and finite positive per-physical-page scale pools
+  (``page_k_scale``/``page_v_scale``) in every attention layer.  With
+  ``audit_every=N`` the engine audits itself every N steps (tests run
+  N=1 and raise; ``serve.py`` runs N=32 and counts
+  ``STATS["audit_failures"]``).
+- **Fault injection.**  A seeded :class:`repro.runtime.faults.FaultPlan`
+  drives all of the above deterministically: allocator exhaustion (pages
+  stolen and held), forced pallas->XLA dispatch fallback for a step
+  (served through an XLA-traced twin — tokens must not change),
+  simulated step stalls inside the watchdog window, and NaN injection
+  into one row's logits.
+
+Scheduling policy (deliberately simple, deterministic): priority-ordered
+(FIFO within a priority class) admission with worst-case page
+reservation, ONE batched admission prefill per (prefix, bucket) group per
+drain, per-sequence EOS eviction, and the prefix registry / CoW machinery
+described above.  A blocked (but servable) request stops admission behind
+it within its scan — except requests in preemption backoff, which are
+skipped without blocking.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import time
+from collections import Counter
 from typing import Optional
 
 import jax
@@ -91,12 +132,26 @@ import numpy as np
 
 from repro.kernels import dispatch
 from repro.models import lm
+from repro.runtime import faults as faults_mod
+from repro.runtime.watchdog import Watchdog
+
+
+class Status:
+    """Request lifecycle states (see the module docstring's diagram)."""
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    REJECTED = "rejected"
+    PREEMPTED = "preempted"       # terminal only via graceful shutdown
 
 
 class PageAllocator:
     """Refcounted physical-page allocator (free list + per-page refcounts).
 
-    Invariants (property-tested in ``tests/test_engine.py``):
+    Invariants (property-tested in ``tests/test_engine.py``, audited
+    engine-wide by :meth:`PagedEngine.audit`):
 
     - a page is on the free list iff its refcount is 0;
     - :meth:`alloc` only hands out ref-0 pages, in FIFO free-list order
@@ -144,14 +199,26 @@ class PageAllocator:
             if self.refs[p] == 0:
                 self.free.append(p)
 
-    def check(self) -> bool:
-        """Assert the allocator invariants (used by the property tests)."""
+    def audit(self) -> list:
+        """Allocator invariant violations (empty list == healthy)."""
+        v = []
         live = {p for p in range(self.num_pages) if self.refs[p] > 0}
         free = set(self.free)
-        assert len(self.free) == len(free), "free list holds duplicates"
-        assert not (live & free), "page both live and free"
-        assert len(free) + len(live) == self.num_pages, "pages leaked"
-        assert all(r >= 0 for r in self.refs), "negative refcount"
+        if len(self.free) != len(free):
+            v.append("free list holds duplicates")
+        if live & free:
+            v.append(f"pages both live and free: {sorted(live & free)}")
+        if len(free | live) != self.num_pages:
+            v.append(f"pages leaked: {len(free)} free + {len(live)} live "
+                     f"!= {self.num_pages}")
+        if any(r < 0 for r in self.refs):
+            v.append("negative refcount")
+        return v
+
+    def check(self) -> bool:
+        """Assert the allocator invariants (used by the property tests)."""
+        violations = self.audit()
+        assert not violations, "; ".join(violations)
         return True
 
 
@@ -178,12 +245,33 @@ class Request:
     # the last prompt token always prefills as tail (its logits seed
     # generation).
     prefix_len: int = 0
+    # Scheduling class: higher admits first and may preempt strictly lower
+    # (equal only after `preempt_after_steps` of starvation).
+    priority: int = 0
+    # Queued-state expiry: wall seconds since first submit / engine steps
+    # since the latest (re)queue.  None = never expires.
+    deadline_s: Optional[float] = None
+    ttl_steps: Optional[int] = None
     # filled by the engine:
     tokens: list = dataclasses.field(default_factory=list)
+    status: str = Status.QUEUED
     admitted_step: int = -1
     finished_step: int = -1
     decode_s: float = 0.0                 # wall time while this row decoded
-    error: Optional[str] = None           # set when the request is rejected
+    error: Optional[str] = None           # set when the request failed
+    preemptions: int = 0                  # times this request lost its row
+    cancel_requested: bool = False
+    # engine-internal bookkeeping:
+    _arrival: int = -1                    # global FIFO order within priority
+    _submit_step: int = -1                # latest (re)queue step (TTL clock)
+    _submit_time: float = 0.0             # first submit wall time (deadline)
+    _not_before_step: int = 0             # preemption backoff gate
+    _replay: Optional[list] = None        # resume: tokens left to replay
+    _resuming: bool = False               # admitted as a recompute
+
+    def cancel(self):
+        """Request cancellation; the engine honours it at its next step."""
+        self.cancel_requested = True
 
     @property
     def done(self) -> bool:
@@ -210,7 +298,12 @@ class PagedEngine:
 
     def __init__(self, cfg: lm.LMConfig, params, *, batch_size: int = 4,
                  max_len: int = 256, page_size: int = 16,
-                 num_pages: Optional[int] = None, prefill_buckets=(64,)):
+                 num_pages: Optional[int] = None, prefill_buckets=(64,),
+                 max_preemptions: int = 3, preempt_after_steps: int = 8,
+                 backoff_cap: int = 8, audit_every: int = 0,
+                 audit_raises: bool = True,
+                 watchdog: Optional[Watchdog] = None,
+                 fault_plan: Optional["faults_mod.FaultPlan"] = None):
         self.cfg, self.params = cfg, params
         self.batch_size, self.page_size = batch_size, page_size
         self.max_pages = -(-max_len // page_size)
@@ -230,10 +323,28 @@ class PagedEngine:
         self.next_tok = np.zeros((batch_size,), np.int32)
         self.queue: list[Request] = []
         self.rejected: list[Request] = []
+        self.cancelled: list[Request] = []
+        self.expired: list[Request] = []
+        self.preempted_out: list[Request] = []   # terminal via shutdown()
         self.step_count = 0
         self.prefill_calls = 0            # batched admission-prefill launches
         self.prefix_prefills = 0          # chunk-1 (shared prefix) launches
         self.shared_prefix_hits = 0       # admissions served off the registry
+        self.preempt_count = 0            # victim preemptions (incl. NaN)
+        self.resume_count = 0             # recompute readmissions
+        self.violations: list[str] = []   # audit / replay-divergence log
+        # Failure-handling policy knobs (module docstring).
+        self.max_preemptions = max_preemptions
+        self.preempt_after_steps = preempt_after_steps
+        self.backoff_cap = backoff_cap
+        self.audit_every = audit_every
+        self.audit_raises = audit_raises
+        self.faults = fault_plan
+        self._fault_held: list[tuple[int, list]] = []   # (release_step, pgs)
+        self.watchdog = watchdog if watchdog is not None else Watchdog()
+        self._wd_user_cb = self.watchdog.on_straggler
+        self.watchdog.on_straggler = self._on_straggler
+        self._arrival_seq = 0
         # Shared-prefix registry: token-block-hash chain -> pinned pages.
         # Insertion-ordered dict doubles as the LRU (reinserted on hit).
         self.prefix_registry: dict[tuple, PrefixEntry] = {}
@@ -253,6 +364,7 @@ class PagedEngine:
                                         page_table, prefix_len=prefix_len)
 
         self._step = jax.jit(step_fn)
+        self._step_xla = None             # forced-fallback twin, traced lazily
         # Retraces once per (bucket, admission-batch-width, prefix-length)
         # shape triple.
         self._admit_prefill = jax.jit(admit_fn, static_argnums=(5,))
@@ -318,7 +430,20 @@ class PagedEngine:
                 and self.alloc.free_count >= self._fresh_pages_needed(req))
 
     def submit(self, req: Request):
+        req.status = Status.QUEUED
+        req._arrival = self._arrival_seq
+        self._arrival_seq += 1
+        req._submit_step = self.step_count
+        req._submit_time = time.monotonic()
         self.queue.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Flag the queued or running request ``rid`` for cancellation."""
+        for req in self.queue + [r for r in self.row_req if r is not None]:
+            if req.rid == rid:
+                req.cancel()
+                return True
+        return False
 
     # -- admission ---------------------------------------------------------
 
@@ -342,6 +467,11 @@ class PagedEngine:
         CoW-copies a partial boundary page; a MISS with a declared prefix
         allocates fresh pages and REGISTERS them (the registry takes its
         own pinning ref, so the prefix outlives this request's eviction).
+
+        A readmission after preemption (``req.preemptions > 0`` with
+        recorded tokens) is the SAME admission — identical prompt, prefix
+        declaration and bucket, hence bit-identical prefill — plus a
+        replay queue of the already-generated tokens (see :meth:`step`).
         """
         need = self._pages_needed(req)
         plen = self._effective_prefix(req)
@@ -382,6 +512,8 @@ class PagedEngine:
         self.pos[row] = len(req.prompt)
         self.row_req[row] = req
         req.admitted_step = self.step_count
+        req.status = Status.RUNNING
+        req._resuming = bool(req.preemptions and req.tokens)
         self._dirty = True
 
     def _reclaim_one(self, skip: Optional[tuple] = None) -> bool:
@@ -395,6 +527,171 @@ class PagedEngine:
                 return True
         return False
 
+    # -- failure handling --------------------------------------------------
+
+    def _terminal(self, req: Request, status: str, error: Optional[str]):
+        req.status = status
+        if error is not None:
+            req.error = error
+        req.finished_step = self.step_count
+        {Status.REJECTED: self.rejected,
+         Status.CANCELLED: self.cancelled,
+         Status.TIMED_OUT: self.expired,
+         Status.PREEMPTED: self.preempted_out}[status].append(req)
+
+    def _violation(self, msg: str):
+        """Record an engine-invariant violation (never crashes serving)."""
+        self.violations.append(msg)
+        dispatch.STATS["audit_failures"] += 1
+
+    def _release_row(self, row: int):
+        """Return a row and its pages to the engine (no req bookkeeping)."""
+        self.alloc.release(self.row_pages[row])
+        self.row_pages[row] = []
+        self.row_req[row] = None
+        self.page_table[row] = -1
+        self.pos[row] = -1
+        self._dirty = True
+
+    def _preempt_row(self, row: int, cause: str):
+        """Evict a victim and re-enqueue it as a bit-exact recompute.
+
+        Non-shared pages recycle immediately (shared prefix pages keep
+        their registry pins and other holders' refs); the request keeps
+        its recorded tokens and re-enters the queue behind an exponential
+        backoff gate.  Past ``max_preemptions`` it is terminally REJECTED
+        instead — preemption never thrashes forever.
+        """
+        req = self.row_req[row]
+        self._release_row(row)
+        req.preemptions += 1
+        req._replay = None
+        req._resuming = False
+        self.preempt_count += 1
+        dispatch.STATS["preemptions"] += 1
+        if req.preemptions > self.max_preemptions:
+            self._terminal(req, Status.REJECTED,
+                           f"preempted {req.preemptions} times "
+                           f"(last cause: {cause}); giving up")
+            return
+        req.status = Status.QUEUED
+        req._submit_step = self.step_count          # starvation clock resets
+        req._not_before_step = self.step_count + min(
+            1 << (req.preemptions - 1), self.backoff_cap)
+        self.queue.append(req)
+
+    def _quarantine(self, row: int):
+        """Non-finite logits in one row: discard the poisoned step and
+        recompute the request on clean pages (same path as preemption —
+        the recorded tokens predate the corruption, so the resume is
+        bit-exact).  Neighbour rows are untouched."""
+        dispatch.STATS["quarantined"] += 1
+        self._preempt_row(row, "non-finite logits in the dequant epilogue")
+
+    def _pick_victim(self, req: Request, admitted_now) -> Optional[int]:
+        """Choose a row to preempt for ``req``: strictly lower priority
+        always; equal priority only once ``req`` has starved for
+        ``preempt_after_steps``.  Lowest priority first, then the
+        youngest admission (least recompute waste).  Rows admitted in the
+        current drain (prefill still pending) are never victims."""
+        starved = (self.step_count - req._submit_step
+                   >= self.preempt_after_steps)
+        best = None
+        for row, vreq in enumerate(self.row_req):
+            if vreq is None or id(vreq) in admitted_now or not vreq.tokens:
+                continue
+            if vreq.priority < req.priority or (starved
+                                                and vreq.priority
+                                                <= req.priority):
+                key = (vreq.priority, -vreq.admitted_step)
+                if best is None or key < best[0]:
+                    best = (key, row)
+        return None if best is None else best[1]
+
+    def _make_room(self, req: Request, plen: int, admitted_now) -> bool:
+        """Admission pressure ladder: free capacity -> registry LRU
+        reclaim -> victim preemption.  True once ``req`` fits."""
+        if self.can_admit(req):
+            return True
+        own = self._req_key(req, plen) if plen else None
+        while not self.can_admit(req) and self._reclaim_one(own):
+            pass
+        while not self.can_admit(req):
+            victim = self._pick_victim(req, admitted_now)
+            if victim is None:
+                return False
+            self._preempt_row(victim, f"pool pressure admitting "
+                                      f"request {req.rid}")
+            while not self.can_admit(req) and self._reclaim_one(own):
+                pass
+        return True
+
+    def _apply_faults_pre(self):
+        """Release expired fault holds; apply this step's injected
+        allocator exhaustion (pages stolen out of the free list)."""
+        due = [(s, p) for s, p in self._fault_held if s <= self.step_count]
+        self._fault_held = [(s, p) for s, p in self._fault_held
+                            if s > self.step_count]
+        for _, pages in due:
+            self.alloc.release(pages)
+        ev = self.faults.at_step(self.step_count) if self.faults else None
+        if ev is not None and ev.steal_pages:
+            pages = self.alloc.alloc(min(ev.steal_pages,
+                                         self.alloc.free_count))
+            if pages:
+                self._fault_held.append(
+                    (self.step_count + max(1, ev.steal_hold), pages))
+        return ev
+
+    def _process_lifecycle(self):
+        """Cancellation (queued + mid-flight) and queued-state expiry."""
+        now = time.monotonic()
+        keep = []
+        for req in self.queue:
+            if req.cancel_requested:
+                self._terminal(req, Status.CANCELLED,
+                               "cancelled while queued")
+                dispatch.STATS["cancelled"] += 1
+            elif (req.ttl_steps is not None
+                  and self.step_count - req._submit_step >= req.ttl_steps):
+                self._terminal(req, Status.TIMED_OUT,
+                               f"expired after {req.ttl_steps} queued steps")
+                dispatch.STATS["expired"] += 1
+            elif (req.deadline_s is not None
+                  and now - req._submit_time >= req.deadline_s):
+                self._terminal(req, Status.TIMED_OUT,
+                               f"deadline {req.deadline_s}s passed while "
+                               f"queued")
+                dispatch.STATS["expired"] += 1
+            else:
+                keep.append(req)
+        self.queue = keep
+        for row, req in enumerate(self.row_req):
+            if req is not None and req.cancel_requested:
+                self._release_row(row)
+                self._terminal(req, Status.CANCELLED, "cancelled mid-flight")
+                dispatch.STATS["cancelled"] += 1
+
+    def _on_straggler(self, dt: float, ema: float):
+        dispatch.STATS["watchdog_fires"] += 1
+        if self._wd_user_cb is not None:
+            self._wd_user_cb(dt, ema)
+
+    def _step_fallback(self):
+        """The XLA-traced twin of the decode step, for forced-fallback
+        fault steps (and, in production, a real kernel failure).  Backend
+        bit-parity means serving through it must not change one token."""
+        if self._step_xla is None:
+            cfg = self.cfg
+
+            def step_fn(params, tok, cache):
+                return lm.decode_step(params, tok, cache, cfg)
+
+            self._step_xla = jax.jit(step_fn)
+        return self._step_xla
+
+    # -- drain / prefill ---------------------------------------------------
+
     def _reject(self, req: Request, plen: int = 0):
         if plen > self.prefill_buckets[-1]:
             what = f"declared prefix length {plen}"
@@ -404,6 +701,7 @@ class PagedEngine:
             what = f"prompt length {len(req.prompt)}"
         req.error = (f"{what} exceeds the largest "
                      f"prefill bucket {self.prefill_buckets[-1]}")
+        req.status = Status.REJECTED
         req.finished_step = self.step_count
         self.rejected.append(req)
 
@@ -413,32 +711,51 @@ class PagedEngine:
         read codes that already exist), then ONE batched tail prefill per
         (prefix length, tail bucket) group.
 
-        Over-length prompts (tail or donor prefix beyond the largest
-        bucket — ``can_admit`` may still say True because they fit the page
-        pool) are rejected with a recorded failure instead of crashing the
-        serve loop.  Under pool pressure, cold registry entries are
-        reclaimed LRU-first before an admission is deferred.
+        The scan runs in (priority desc, arrival) order.  Requests that
+        can NEVER run — prompt over the largest bucket, worst-case pages
+        over the page-table row or the whole pool — are rejected in place
+        (``Request.error``) instead of blocking the head of the queue.
+        Requests in preemption backoff are skipped without blocking.  A
+        merely-blocked servable request stops admission behind it (FIFO
+        within priority) after the pressure ladder — registry LRU
+        reclaim, then victim preemption (:meth:`_make_room`) — fails.
         """
         admits = []
-        while self.queue:
-            req = self.queue[0]
+        admitted_now: set = set()
+        self.queue.sort(key=lambda r: (-r.priority, r._arrival))
+        i = 0
+        while i < len(self.queue):
+            req = self.queue[i]
             plen = self._effective_prefix(req)
             if (len(req.prompt) - plen > self.prefill_buckets[-1]
                     or plen > self.prefill_buckets[-1]):
-                self.queue.pop(0)
+                self.queue.pop(i)
                 self._reject(req, plen)
                 continue
-            if not self.can_admit(req):
-                own = self._req_key(req, plen) if plen else None
-                while not self.can_admit(req) and self._reclaim_one(own):
-                    pass
-                if not self.can_admit(req):
-                    break
-            self.queue.pop(0)
+            need = self._pages_needed(req)
+            if need > self.max_pages:
+                self.queue.pop(i)
+                self._terminal(req, Status.REJECTED,
+                               f"needs {need} pages but a sequence may hold "
+                               f"at most {self.max_pages}")
+                continue
+            if need > self.num_pages:
+                self.queue.pop(i)
+                self._terminal(req, Status.REJECTED,
+                               f"needs {need} pages but the pool has only "
+                               f"{self.num_pages}")
+                continue
+            if req._not_before_step > self.step_count:
+                i += 1                              # backoff: skip, no block
+                continue
+            if not self._make_room(req, plen, admitted_now):
+                break
+            self.queue.pop(i)
             row = self.row_req.index(None)
             # donor-ness decided BEFORE _admit registers the prefix
             donor = plen > 0 and self._lookup_prefix(req, plen) is None
             self._admit(req, row)
+            admitted_now.add(id(req))
             admits.append((req, row, plen, donor))
         for req, row, plen, donor in admits:
             if donor:
@@ -480,7 +797,11 @@ class PagedEngine:
         pools at the reserved physical pages (lm.admission_prefill) — no
         private batch=1 cache and no page-copy pass.  With a prefix, each
         row's leading pages are the shared (or freshly prefilled) prefix
-        pages and the tail attends them through their stored codes."""
+        pages and the tail attends them through their stored codes.
+
+        A resumed row's prefill is bit-identical to its original one, so
+        its recomputed first token must equal the recorded one; the row
+        then re-enters decode in REPLAY mode instead of re-recording."""
         w = len(group)
         toks = np.zeros((w, bucket), np.int32)
         lens = np.zeros((w,), np.int32)
@@ -499,6 +820,18 @@ class PagedEngine:
         self.prefill_calls += 1
         first = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         for j, (req, row) in enumerate(group):
+            if req._resuming:
+                if int(first[j]) != req.tokens[0]:
+                    self._violation(
+                        f"resume prefill diverged for request {req.rid}: "
+                        f"recomputed {int(first[j])} != recorded "
+                        f"{req.tokens[0]}")
+                self.next_tok[row] = req.tokens[0]
+                req._replay = list(req.tokens[1:]) or None
+                req._resuming = False
+                self.resume_count += 1
+                dispatch.STATS["resumes"] += 1
+                continue
             self.next_tok[row] = first[j]
             req.tokens.append(int(first[j]))
             self._maybe_finish(row, int(first[j]))
@@ -514,12 +847,94 @@ class PagedEngine:
     def _evict(self, row: int):
         req = self.row_req[row]
         req.finished_step = self.step_count
-        self.alloc.release(self.row_pages[row])
-        self.row_pages[row] = []
-        self.row_req[row] = None
-        self.page_table[row] = -1
-        self.pos[row] = -1
-        self._dirty = True
+        req.status = Status.DONE
+        self._release_row(row)
+
+    # -- auditing ----------------------------------------------------------
+
+    def audit(self, raise_on_fail: Optional[bool] = None) -> list:
+        """Engine-wide invariant audit; returns the violation list.
+
+        Cross-checks, beyond :meth:`PageAllocator.audit`:
+
+        - every physical page's refcount equals its independently counted
+          holders: rows' page lists + registry pins + CoW pendency refs +
+          fault-injection holds;
+        - host mirrors are consistent: ``page_table`` rows mirror
+          ``row_pages`` exactly (-1 beyond), inactive rows are fully
+          cleared (``pos == -1``), and an active row's ``pos`` sits inside
+          [len(prompt), len(prompt) + len(tokens) - 1] (the upper bound is
+          exact once replay has drained);
+        - per-physical-page scale pools (``page_k_scale``/``page_v_scale``
+          in every attention layer) are finite and positive — a NaN/zero
+          grid would silently corrupt every future write to that page.
+
+        Failures bump ``STATS["audit_failures"]`` and are kept in
+        ``self.violations``; with ``raise_on_fail`` (default: the
+        engine's ``audit_raises``) a RuntimeError carries them.
+        """
+        v = list(self.alloc.audit())
+        holders = Counter(p for pages in self.row_pages for p in pages)
+        pins = Counter(p for e in self.prefix_registry.values()
+                       for p in e.pages)
+        pend = Counter(src for src, _ in self._pending_cow)
+        held = Counter(p for _, pages in self._fault_held for p in pages)
+        for p in range(self.num_pages):
+            expect = holders[p] + pins[p] + pend[p] + held[p]
+            if self.alloc.refs[p] != expect:
+                v.append(f"page {p}: refcount {self.alloc.refs[p]} != "
+                         f"{holders[p]} row holders + {pins[p]} registry "
+                         f"pins + {pend[p]} CoW pendency + {held[p]} fault "
+                         f"holds")
+        for row in range(self.batch_size):
+            req, pages = self.row_req[row], self.row_pages[row]
+            if req is None:
+                if pages:
+                    v.append(f"row {row}: free row still holds {pages}")
+                if self.pos[row] != -1:
+                    v.append(f"row {row}: free row has pos {self.pos[row]}")
+                if np.any(self.page_table[row] != -1):
+                    v.append(f"row {row}: free row has live table entries")
+                continue
+            need = self._pages_needed(req)
+            if len(pages) != need:
+                v.append(f"row {row}: holds {len(pages)} pages, "
+                         f"reservation is {need}")
+            if list(self.page_table[row, :len(pages)]) != pages:
+                v.append(f"row {row}: page_table mirror != row_pages")
+            if np.any(self.page_table[row, len(pages):] != -1):
+                v.append(f"row {row}: table entries beyond the reservation")
+            lo = len(req.prompt)
+            hi = lo + max(len(req.tokens) - 1, 0)
+            if not (lo <= int(self.pos[row]) <= hi):
+                v.append(f"row {row}: pos {int(self.pos[row])} outside "
+                         f"[{lo}, {hi}] for request {req.rid}")
+            elif req._replay is None and req._resuming is False \
+                    and int(self.pos[row]) != hi:
+                v.append(f"row {row}: pos {int(self.pos[row])} != {hi} "
+                         f"with no replay pending")
+        for path, kpool, vpool in lm.page_scale_pools(self.cache):
+            for name, pool in (("page_k_scale", kpool),
+                               ("page_v_scale", vpool)):
+                # the trailing TRASH page takes masked writes with
+                # whatever rowscale the lane computed — exempt it
+                arr = np.asarray(pool)[..., :self.num_pages]
+                if not np.all(np.isfinite(arr)):
+                    v.append(f"{path}.{name}: non-finite page scale")
+                elif not np.all(arr > 0):
+                    v.append(f"{path}.{name}: non-positive page scale")
+        if v:
+            self.violations.extend(v)
+            dispatch.STATS["audit_failures"] += 1
+            do_raise = self.audit_raises if raise_on_fail is None \
+                else raise_on_fail
+            if do_raise:
+                raise RuntimeError("engine audit failed: " + "; ".join(v))
+        return v
+
+    def _audit_maybe(self):
+        if self.audit_every and self.step_count % self.audit_every == 0:
+            self.audit()
 
     # -- serving loop ------------------------------------------------------
 
@@ -531,40 +946,100 @@ class PagedEngine:
             self._dirty = False
 
     def step(self) -> bool:
-        """Drain admissions (one batched prefill per bucket), decode one
-        token for every active row.
+        """One engine step: lifecycle (cancel/expire) -> fault injection ->
+        drain admissions (one batched prefill per group, preempting
+        victims under pressure) -> decode one token for every active row
+        (replaying recorded tokens for resumed rows) -> quarantine
+        non-finite rows -> periodic audit.
 
         Returns False when there is nothing left to do.
         """
+        ev = self._apply_faults_pre()
+        self._process_lifecycle()
         self._drain_queue()
         active = [r for r, req in enumerate(self.row_req) if req is not None]
         if not active:
             if self.queue:
-                # Every row is free yet the head request still cannot be
-                # admitted: it can never run on this pool.
-                req = self.queue[0]
-                raise RuntimeError(
-                    f"request {req.rid} needs {self._pages_needed(req)} "
-                    f"pages but the pool has {self.num_pages} and a "
-                    f"sequence may hold at most {self.max_pages}")
+                # Everything queued is gated on preemption backoff or on
+                # fault-held pages: tick time forward so the gates expire.
+                self.step_count += 1
+                self._audit_maybe()
+                return True
             return False
         self._push_tables()
+        step_fn = self._step
+        if ev is not None and ev.force_xla:
+            step_fn = self._step_fallback()
+            dispatch.STATS["forced_xla_steps"] += 1
+        self.watchdog.start()
+        if ev is not None and ev.stall_s:
+            time.sleep(ev.stall_s)              # straggler, seen by the EMA
         t0 = time.perf_counter()
-        logits, self.cache = self._step(
-            self.params, jnp.asarray(self.next_tok)[:, None], self.cache)
+        if step_fn is self._step:
+            logits, self.cache = step_fn(
+                self.params, jnp.asarray(self.next_tok)[:, None], self.cache)
+        else:
+            # Backend choice is trace-time: the twin must (re)trace and run
+            # under the forced backend.
+            with dispatch.use_backend("xla"):
+                logits, self.cache = step_fn(
+                    self.params, jnp.asarray(self.next_tok)[:, None],
+                    self.cache)
+        if ev is not None and ev.nan_row is not None:
+            logits = faults_mod.corrupt_rows(
+                logits, [active[ev.nan_row % len(active)]])
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        finite = np.asarray(jnp.all(jnp.isfinite(logits[:, 0]), axis=-1))
         dt = time.perf_counter() - t0
+        self.watchdog.stop()
         self.pos[self.pos >= 0] += 1          # mirror the device update
         self.step_count += 1
         for row in active:
             req = self.row_req[row]
             req.decode_s += dt
+            if not finite[row]:
+                self._quarantine(row)
+                continue
+            if req._replay:
+                expect = req._replay.pop(0)
+                if int(nxt[row]) != expect:
+                    self._violation(
+                        f"replay diverged for request {req.rid}: recomputed "
+                        f"{int(nxt[row])} != recorded {expect}")
+                self.next_tok[row] = expect
+                if not req._replay:
+                    req._replay = None
+                continue
+            req._replay = None
             req.tokens.append(int(nxt[row]))
             self.next_tok[row] = nxt[row]
             self._maybe_finish(row, int(nxt[row]))
+        self._audit_maybe()
         return True
 
-    def run(self, requests=None) -> list[Request]:
+    def shutdown(self):
+        """Graceful drain (SIGTERM/SIGUSR1 path): stop serving NOW.
+
+        Queued requests are terminally PREEMPTED with an error (never
+        admitted); in-flight rows are released with their PARTIAL token
+        streams kept (status PREEMPTED, no error — the work delivered so
+        far is valid and, being deterministic, resumable by a restarted
+        engine from prompt + tokens).  Fault holds are dropped so the
+        allocator conserves; the registry keeps its pins (a restart may
+        rebuild onto them)."""
+        for req in list(self.queue):
+            self._terminal(req, Status.PREEMPTED,
+                           "preempted before admission (engine shutdown)")
+        self.queue.clear()
+        for row, req in enumerate(self.row_req):
+            if req is not None:
+                self._release_row(row)
+                self._terminal(req, Status.PREEMPTED, None)
+        for _, pages in self._fault_held:
+            self.alloc.release(pages)
+        self._fault_held.clear()
+
+    def run(self, requests=None) -> list:
         """Serve ``requests`` (plus anything already queued) to completion."""
         done: list[Request] = []
         for r in requests or []:

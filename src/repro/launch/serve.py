@@ -19,6 +19,18 @@ traced onto the Pallas kernels (``attention_paged_pallas`` > 0 for the
 decode loop) instead of silently falling back to XLA.  ``--json`` emits
 the whole report as one JSON object on stdout so CI parses it instead of
 grepping log lines.
+
+Failure handling (see the ``launch/engine.py`` module docstring for the
+full request state machine): the loop installs the
+:mod:`repro.runtime.preemption` SIGTERM/SIGUSR1 handlers and polls
+``should_stop()`` every engine step.  On a signal it stops admitting,
+releases in-flight rows with their partial outputs kept, and still emits
+the final report — flagged ``"preempted": true`` — before exiting with
+``PREEMPTED_EXIT_CODE``.  ``--deadline-s`` expires queued requests,
+``--audit-every N`` runs the engine-wide invariant audit every N steps
+(failures are counted, never fatal, in production), and the report's
+``failures`` section surfaces the engine's preemption / resume / cancel /
+expiry / watchdog / audit counters.
 """
 from __future__ import annotations
 
@@ -34,12 +46,36 @@ from repro.core.api import QuantConfig, integerize_params
 from repro.kernels import dispatch
 from repro.launch.engine import PagedEngine, Request
 from repro.models import lm
+from repro.runtime import preemption
+
+_FAILURE_KEYS = ("preemptions", "resumes", "cancelled", "expired",
+                 "watchdog_fires", "audit_failures", "forced_xla_steps",
+                 "quarantined")
+
+_EPILOG = """\
+failure handling:
+  SIGTERM / SIGUSR1   graceful drain: stop admitting, release in-flight
+                      rows keeping their partial outputs, emit the final
+                      report with "preempted": true, exit with code 42.
+  pool pressure       victim preemption with bit-exact resume: the evicted
+                      request re-enters admission as a recompute and its
+                      resumed tokens are bit-identical to an uninterrupted
+                      run (capped backoff, terminal rejection after
+                      repeated preemption).
+  --deadline-s        queued requests past the deadline expire instead of
+                      stalling decode behind an unservable queue.
+  --audit-every N     engine-wide invariant audit (page conservation,
+                      refcounts vs. registry pins, scale-pool health)
+                      every N steps; failures are counted in the report's
+                      "failures" section, never fatal in serving.
+"""
 
 
 def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
           max_len: int | None = None, page_size: int = 16,
           eos_id: int | None = None, batch_size: int | None = None,
-          prefix_len: int = 0):
+          prefix_len: int = 0, deadline_s: float | None = None,
+          audit_every: int = 0, preempt_after_step: int | None = None):
     """prompts: (B, S) int32 (or a list of ragged 1-D prompts) ->
     (generated (B, gen_tokens) int32, stats).
 
@@ -49,6 +85,14 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
     cache breakpoint on every request (system-prompt traffic): requests
     whose leading ``prefix_len`` tokens agree alias the same refcounted
     physical pages and prefill that prefix ONCE.
+
+    The step loop polls :func:`repro.runtime.preemption.should_stop`
+    (SIGTERM/SIGUSR1 when the CLI installed the handlers): on a signal
+    the engine shuts down gracefully — queued requests are preempted
+    unserved, in-flight rows keep their partial outputs — and the stats
+    carry ``preempted: True``.  ``preempt_after_step`` trips the same
+    path from inside the loop at a fixed step (deterministic
+    graceful-shutdown testing without racing a real signal).
     """
     if hasattr(prompts, "shape"):
         prompts = [np.asarray(prompts[i], np.int32)
@@ -57,14 +101,27 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
     max_len = max_len or (max(lens) + gen_tokens)
     bucket = max(lens)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=gen_tokens,
-                    eos_id=eos_id, prefix_len=prefix_len)
+                    eos_id=eos_id, prefix_len=prefix_len,
+                    deadline_s=deadline_s)
             for i, p in enumerate(prompts)]
 
     t0 = time.perf_counter()
     engine = PagedEngine(cfg, params, batch_size=batch_size or len(reqs),
                          max_len=max_len, page_size=page_size,
-                         prefill_buckets=(bucket,))
-    engine.run(reqs)
+                         prefill_buckets=(bucket,),
+                         audit_every=audit_every, audit_raises=False)
+    for r in reqs:
+        engine.submit(r)
+    preempted = False
+    while True:
+        if preemption.should_stop() or (
+                preempt_after_step is not None
+                and engine.step_count >= preempt_after_step):
+            engine.shutdown()
+            preempted = True
+            break
+        if not engine.step():
+            break
     total_s = time.perf_counter() - t0
 
     gen = np.zeros((len(reqs), gen_tokens), np.int32)
@@ -72,6 +129,7 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
         gen[i, :len(r.tokens)] = r.tokens
     n_tok = sum(len(r.tokens) for r in reqs)
     decode_s = sum(r.decode_s for r in reqs) / max(len(reqs), 1)
+    snap = dispatch.snapshot()
     return jnp.asarray(gen), {
         "total_s": total_s,
         "prefill_s": total_s - decode_s,
@@ -79,6 +137,7 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
         "tok_per_s": n_tok / max(total_s, 1e-9),
         "per_seq": [{"rid": r.rid, "prompt_len": len(r.prompt),
                      "gen": len(r.tokens),
+                     "status": r.status,
                      "admitted_step": r.admitted_step,
                      "finished_step": r.finished_step,
                      "tok_per_s": r.tok_per_s,
@@ -89,12 +148,17 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
         "shared_prefix_hits": engine.shared_prefix_hits,
         "registered_prefixes": len(engine.prefix_registry),
         "rejected": len(engine.rejected),
-        "dispatch": dispatch.snapshot(),
+        "preempted": preempted,
+        "failures": {k: snap[k] for k in _FAILURE_KEYS},
+        "audit_violations": list(engine.violations),
+        "dispatch": snap,
     }
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=_EPILOG)
     ap.add_argument("--arch", default="qwen2.5-32b")
     ap.add_argument("--mode", choices=["int", "float"], default="int")
     ap.add_argument("--backend", choices=["xla", "pallas"], default=None,
@@ -119,6 +183,17 @@ def main(argv=None):
                          "requests")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="expire requests still queued after this many "
+                         "wall seconds (TIMED_OUT, never stalls decode)")
+    ap.add_argument("--audit-every", type=int, default=32,
+                    help="run the engine-wide invariant audit every N "
+                         "steps (0 disables; failures are counted in the "
+                         "report, not fatal)")
+    ap.add_argument("--preempt-after-step", type=int, default=None,
+                    help="trip the graceful-shutdown path (as if SIGUSR1 "
+                         "arrived) once the engine reaches this step — "
+                         "deterministic drill for the preemption machinery")
     ap.add_argument("--json", action="store_true",
                     help="emit the report as one JSON object on stdout")
     args = ap.parse_args(argv)
@@ -146,34 +221,48 @@ def main(argv=None):
                                  args.shared_prefix).astype(np.int32)
         prompts = [np.concatenate([sys_prompt, p]) for p in prompts]
     dispatch.reset_stats()
-    toks, stats = serve(cfg, params, prompts, gen_tokens=args.gen,
-                        page_size=args.page_size, eos_id=args.eos_id,
-                        batch_size=args.batch,
-                        prefix_len=args.shared_prefix)
+    preemption.reset()
+    preemption.install()
+    try:
+        toks, stats = serve(cfg, params, prompts, gen_tokens=args.gen,
+                            page_size=args.page_size, eos_id=args.eos_id,
+                            batch_size=args.batch,
+                            prefix_len=args.shared_prefix,
+                            deadline_s=args.deadline_s,
+                            audit_every=args.audit_every,
+                            preempt_after_step=args.preempt_after_step)
+    finally:
+        preemption.reset()
     if args.json:
         print(json.dumps({"mode": args.mode, "backend": args.backend,
                           "sample": toks[0, :12].tolist(), **stats},
                          indent=2))
-        return
-    print(f"[serve:{args.mode}] total {stats['total_s']:.3f}s  "
-          f"decode {stats['decode_s']:.3f}s  {stats['tok_per_s']:.1f} tok/s  "
-          f"steps {stats['engine_steps']}  "
-          f"prefills {stats['prefill_calls']}  "
-          f"(prefix {stats['prefix_prefills']}, "
-          f"hits {stats['shared_prefix_hits']})  "
-          f"rejected {stats['rejected']}")
-    for s in stats["per_seq"]:
-        tail = f"REJECTED: {s['error']}" if s["error"] else \
-            f"{s['tok_per_s']:.1f} tok/s"
-        print(f"  [seq {s['rid']}] prompt {s['prompt_len']:4d}  "
-              f"gen {s['gen']:3d}  admitted@{s['admitted_step']}  "
-              f"finished@{s['finished_step']}  {tail}")
-    print("[dispatch] " + "  ".join(f"{k}={v}"
-                                    for k, v in stats["dispatch"].items()
-                                    if not isinstance(v, dict)))
-    for k, v in sorted(stats["dispatch"].get("blocks", {}).items()):
-        print(f"[blocks] {k} -> {v}")
-    print("sample:", toks[0, :12].tolist())
+    else:
+        flag = "  PREEMPTED (partial)" if stats["preempted"] else ""
+        print(f"[serve:{args.mode}] total {stats['total_s']:.3f}s  "
+              f"decode {stats['decode_s']:.3f}s  "
+              f"{stats['tok_per_s']:.1f} tok/s  "
+              f"steps {stats['engine_steps']}  "
+              f"prefills {stats['prefill_calls']}  "
+              f"(prefix {stats['prefix_prefills']}, "
+              f"hits {stats['shared_prefix_hits']})  "
+              f"rejected {stats['rejected']}{flag}")
+        for s in stats["per_seq"]:
+            tail = f"{s['status'].upper()}: {s['error']}" if s["error"] \
+                else f"{s['status']}  {s['tok_per_s']:.1f} tok/s"
+            print(f"  [seq {s['rid']}] prompt {s['prompt_len']:4d}  "
+                  f"gen {s['gen']:3d}  admitted@{s['admitted_step']}  "
+                  f"finished@{s['finished_step']}  {tail}")
+        print("[failures] " + "  ".join(
+            f"{k}={v}" for k, v in stats["failures"].items()))
+        print("[dispatch] " + "  ".join(
+            f"{k}={v}" for k, v in stats["dispatch"].items()
+            if not isinstance(v, dict) and k not in _FAILURE_KEYS))
+        for k, v in sorted(stats["dispatch"].get("blocks", {}).items()):
+            print(f"[blocks] {k} -> {v}")
+        print("sample:", toks[0, :12].tolist())
+    if stats["preempted"]:
+        raise SystemExit(preemption.PREEMPTED_EXIT_CODE)
 
 
 if __name__ == "__main__":

@@ -807,6 +807,27 @@ def copy_page(cache, src: int, dst: int):
     return walk(cache, False)
 
 
+def page_scale_pools(cache):
+    """Yield ``(path, page_k_scale, page_v_scale)`` for every attention
+    layer's per-physical-page scale pools in a paged cache.
+
+    The engine's invariant auditor (``PagedEngine.audit``) walks these to
+    assert every page's quantization grid stays finite and positive —
+    decode writes (``_paged_write_decode``) quantize onto
+    ``page_k_scale[phys]``, so one corrupted scale silently poisons every
+    later token written to that page.  ``units`` subtree leaves carry a
+    leading layer-stack axis; the pools are yielded as stored (trash page
+    included — callers decide whether to exempt it)."""
+    def walk(c, path):
+        if "page_k_scale" in c:
+            yield path, c["page_k_scale"], c["page_v_scale"]
+        for key, leaf in c.items():
+            if isinstance(leaf, dict):
+                yield from walk(leaf, f"{path}/{key}" if path else key)
+
+    yield from walk(cache, "")
+
+
 def _admission_view(cache, w: int, page_table):
     """W-row prefill view over a B-row paged cache.
 

@@ -1,0 +1,145 @@
+"""Deterministic fault injection for the serving engine.
+
+Production serving dies in ways unit tests never exercise: the page pool
+runs dry under a burst, a kernel backend regresses and the dispatch layer
+falls back, a host stalls for hundreds of milliseconds, a numerics bug
+lets a NaN escape the dequantization epilogue.  This module turns each of
+those into a *seeded, replayable* event stream so the engine's recovery
+paths (victim preemption + bit-exact resume, watchdog, per-row NaN
+quarantine — see :mod:`repro.launch.engine`) can be driven in CI exactly
+the same way every run.
+
+A :class:`FaultPlan` precomputes its whole event schedule at construction
+from one ``numpy.random.RandomState(seed)`` — the plan is a pure function
+of its arguments, never of engine timing — and the engine polls
+:meth:`FaultPlan.at_step` once per step.  Four fault kinds are modelled:
+
+``steal``
+    Allocator exhaustion: ``steal_pages`` physical pages are allocated
+    out of the engine's :class:`~repro.launch.engine.PageAllocator` and
+    held for ``steal_hold`` steps.  Admission sees a smaller pool, which
+    is exactly the pressure that triggers registry reclaim and then
+    victim preemption.
+``stall``
+    A simulated straggler: the engine sleeps ``stall_s`` inside the
+    watchdog's timing window, driving the per-step EMA watchdog
+    (:mod:`repro.runtime.watchdog`) the way a slow host would.
+``force_xla``
+    A forced pallas -> XLA dispatch fallback for one step: the engine
+    routes the step through its XLA-traced twin.  Because the backends
+    are bit-identical (the repo's standing parity guarantee), served
+    tokens must not change — which makes this fault a *detector* for
+    backend divergence as much as a resilience drill.
+``nan_row``
+    NaN/overflow escaping the dequant epilogue of one batch row:
+    :func:`corrupt_rows` overwrites that row's logits with NaN after the
+    step.  The engine must detect the non-finite row and quarantine it
+    (preempt-and-resume, recomputing on clean state) instead of letting
+    one row's garbage argmax corrupt its stream or stall neighbours.
+
+Tests may also pin events exactly with ``at=[FaultEvent(step=3, ...)]``
+or :meth:`FaultPlan.schedule` (the chaos harness drives faults from its
+own op sequence); scheduled events merge field-wise into any seeded event
+at the same step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """Faults injected at one engine step (fields combine freely)."""
+    step: int
+    steal_pages: int = 0          # pages yanked from the allocator ...
+    steal_hold: int = 0           # ... held for this many steps
+    stall_s: float = 0.0          # sleep inside the watchdog window
+    force_xla: bool = False       # route the step through the XLA twin
+    nan_row: Optional[int] = None  # corrupt this (mod active) row's logits
+
+    def merge(self, other: "FaultEvent") -> "FaultEvent":
+        """Field-wise union of two events at the same step."""
+        return FaultEvent(
+            step=self.step,
+            steal_pages=max(self.steal_pages, other.steal_pages),
+            steal_hold=max(self.steal_hold, other.steal_hold),
+            stall_s=max(self.stall_s, other.stall_s),
+            force_xla=self.force_xla or other.force_xla,
+            nan_row=self.nan_row if other.nan_row is None else other.nan_row)
+
+
+class FaultPlan:
+    """Seeded, precomputed fault schedule (deterministic by construction).
+
+    The whole ``horizon``-step schedule is drawn at ``__init__`` time from
+    ``RandomState(seed)`` — identical arguments give identical fault
+    streams no matter how the engine interleaves its calls, which is what
+    lets the chaos suite replay failures and the preemption parity tests
+    pin "pool pressure at step N" exactly.
+    """
+
+    def __init__(self, seed: int = 0, horizon: int = 2048, *,
+                 p_steal: float = 0.0, steal_pages: int = 2,
+                 steal_hold: int = 4,
+                 p_stall: float = 0.0, stall_s: float = 0.02,
+                 p_fallback: float = 0.0,
+                 p_nan: float = 0.0,
+                 at: Iterable[FaultEvent] = ()):
+        self.seed, self.horizon = seed, horizon
+        self._events: dict[int, FaultEvent] = {}
+        rng = np.random.RandomState(seed)
+        for step in range(horizon):
+            # Fixed draw count per step: the schedule at step s never
+            # depends on which probabilities are enabled before it.
+            u = rng.rand(4)
+            row_draw = int(rng.randint(0, 1 << 30))
+            ev = FaultEvent(step=step)
+            if u[0] < p_steal:
+                ev.steal_pages, ev.steal_hold = steal_pages, steal_hold
+            if u[1] < p_stall:
+                ev.stall_s = stall_s
+            if u[2] < p_fallback:
+                ev.force_xla = True
+            if u[3] < p_nan:
+                ev.nan_row = row_draw
+            if (ev.steal_pages or ev.stall_s or ev.force_xla
+                    or ev.nan_row is not None):
+                self._events[step] = ev
+        for ev in at:
+            self.schedule(ev)
+
+    def schedule(self, event: FaultEvent):
+        """Pin an exact event (merges into any seeded event at that step)."""
+        cur = self._events.get(event.step)
+        self._events[event.step] = event if cur is None else cur.merge(event)
+
+    def at_step(self, step: int) -> Optional[FaultEvent]:
+        return self._events.get(step)
+
+    def summary(self) -> dict:
+        """Schedule census for reports: events per fault kind."""
+        evs = self._events.values()
+        return {
+            "seed": self.seed,
+            "events": len(self._events),
+            "steals": sum(1 for e in evs if e.steal_pages),
+            "stalls": sum(1 for e in evs if e.stall_s),
+            "forced_xla": sum(1 for e in evs if e.force_xla),
+            "nan_rows": sum(1 for e in evs if e.nan_row is not None),
+        }
+
+
+def corrupt_rows(logits, rows):
+    """Overwrite ``rows`` of a (B, 1, V) logits batch with NaN.
+
+    Models NaN/overflow escaping the dequantization epilogue of those
+    rows' matmuls.  The injection happens at the step boundary (after the
+    jitted step, before token selection), which is exactly where the
+    engine's per-row finite check sits — so detection is exercised end to
+    end with no special-cased "fault mode" in the serving path.
+    """
+    return logits.at[jnp.asarray(list(rows), jnp.int32)].set(jnp.nan)

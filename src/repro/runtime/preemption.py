@@ -1,19 +1,27 @@
-"""Preemption handling: SIGTERM -> checkpoint-and-exit.
+"""Preemption handling: SIGTERM/SIGUSR1 -> graceful drain-and-exit.
 
-Cloud TPU/TRN fleets deliver a grace signal before eviction; the training
-loop polls :func:`should_stop` each step and writes a final checkpoint
-before exiting with a distinct code so the launcher restarts cleanly.
+Cloud TPU/TRN fleets deliver a grace signal before eviction.  Loops poll
+:func:`should_stop` each step; on True, the training loop writes a final
+checkpoint and the serving loop (``launch/serve.py``) stops admitting,
+drains or releases in-flight rows via ``PagedEngine.shutdown()`` (partial
+outputs kept, ``preempted: true`` in the report), then exits with
+:data:`PREEMPTED_EXIT_CODE` so the launcher restarts cleanly instead of
+treating the eviction as a crash.  :func:`last_signal` reports which
+signal tripped the flag (fleet schedulers send SIGTERM; operators and
+tests use SIGUSR1).
 """
 from __future__ import annotations
 
 import signal
+from typing import Optional
 
 PREEMPTED_EXIT_CODE = 42
-_FLAG = {"stop": False}
+_FLAG = {"stop": False, "signum": None}
 
 
 def _handler(signum, frame):
     _FLAG["stop"] = True
+    _FLAG["signum"] = signum
 
 
 def install():
@@ -25,5 +33,11 @@ def should_stop() -> bool:
     return _FLAG["stop"]
 
 
+def last_signal() -> Optional[int]:
+    """The signal number that tripped the flag (None if never tripped)."""
+    return _FLAG["signum"]
+
+
 def reset():
     _FLAG["stop"] = False
+    _FLAG["signum"] = None

@@ -5,6 +5,13 @@ tracks an EMA of step time and flags steps slower than ``threshold`` x EMA;
 after ``patience`` consecutive flags it fires ``on_straggler`` (production:
 trigger elastic re-mesh / evict host — see distributed.elastic; tests inject
 a sleep and assert detection).
+
+The serving engine (``launch/engine.py``) runs every decode step inside
+``start()``/``stop()`` and routes ``on_straggler`` into
+``dispatch.STATS["watchdog_fires"]``; the fault harness
+(``runtime/faults.py``) injects stalls into that window to drive it
+deterministically.  ``flags`` counts every flagged-slow step (including
+blips that never reach ``patience``), ``fired`` only sustained ones.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ class Watchdog:
     _consecutive: int = 0
     _t0: float = 0.0
     fired: int = 0
+    flags: int = 0
 
     def start(self):
         self._t0 = time.monotonic()
@@ -39,6 +47,7 @@ class Watchdog:
             return False
         slow = dt > self.threshold * self.ema
         if slow:
+            self.flags += 1
             self._consecutive += 1
             if self._consecutive >= self.patience:
                 self.fired += 1

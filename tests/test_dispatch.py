@@ -414,6 +414,19 @@ def test_kernel_bench_json(tmp_path):
         assert pb["shared"]["prefix_prefills"] == 1
         assert pb["unshared"]["prefix_prefills"] == 0
         assert pb["pages_saved"] > 0
+    # Preemption: the analytic recompute bill stays under the recovered
+    # capacity, and the timed loop really preempted, resumed, and landed
+    # bit-identical on both backends.
+    for a in payload["paged"]["preemption"]["analytic"]:
+        assert a["pages_recovered_per_preemption"] > 0
+        assert a["resume_recompute_tokens"] == a["prompt"] + a["gen"]
+        assert a["rewrite_per_freed_byte"] < 1.0
+    for backend in ("xla", "pallas"):
+        pl = payload["paged"]["preemption"]["loop"][backend]
+        assert pl["preemptions"] >= 1 and pl["resumes"] >= 1
+        assert pl["pages_recovered"] > 0
+        assert pl["steal_latency_ms"] > 0
+        assert pl["bit_identical"] is True
 
 
 @pytest.mark.smoke
@@ -441,3 +454,11 @@ def test_kernel_bench_check_guard(tmp_path):
     bad2.write_text(json.dumps(tampered))
     with pytest.raises(SystemExit):
         kernel_bench.main(["--check", str(bad2)])
+    # ... and so do the preempt-resume analytics
+    tampered = json.loads(good.read_text())
+    tampered["paged"]["preemption"]["analytic"][0][
+        "resume_kv_bytes_rewritten"] -= 1
+    bad3 = tmp_path / "tampered_preempt.json"
+    bad3.write_text(json.dumps(tampered))
+    with pytest.raises(SystemExit):
+        kernel_bench.main(["--check", str(bad3)])

@@ -26,7 +26,7 @@ import pytest
 
 from repro.core.api import QuantConfig, integerize_params
 from repro.kernels import dispatch
-from repro.launch.engine import PageAllocator, PagedEngine, Request
+from repro.launch.engine import PageAllocator, PagedEngine, Request, Status
 from repro.models import lm
 
 try:
@@ -133,17 +133,22 @@ def test_engine_never_retraces_decode_step():
 
 
 def test_engine_rejects_impossible_request():
+    """A request whose worst-case reservation exceeds the whole pool can
+    never run: it must be terminally REJECTED with ``Request.error`` (no
+    crash, no head-of-line block — the old engine raised here)."""
     cfg, params = _setup()
     eng = PagedEngine(cfg, params, **{**ENGINE_KW, "num_pages": 2})
-    eng.submit(Request(rid=0, prompt=_prompts([30], seed=5)[0],
-                       max_new_tokens=8))
-    with pytest.raises(RuntimeError, match="pages"):
-        eng.run()
+    req = Request(rid=0, prompt=_prompts([30], seed=5)[0], max_new_tokens=8)
+    eng.run([req])
+    assert req.failed and req.done and req.status == Status.REJECTED
+    assert "pool has" in req.error and eng.rejected == [req]
+    assert len(eng.free_pages) == eng.num_pages  # nothing leaked
 
 
 def test_engine_rejects_request_exceeding_max_len():
-    """prompt + max_new beyond max_len must refuse cleanly (RuntimeError),
-    not crash mid-admission after pages were popped from the free list."""
+    """prompt + max_new beyond max_len must refuse cleanly with a recorded
+    failure, not crash mid-admission after pages were popped from the
+    free list — and not block requests queued behind it."""
     cfg, params = _setup()
     # max_len=64, page_size=8 -> max_pages=4... use a small table:
     eng = PagedEngine(cfg, params, batch_size=2, max_len=32, page_size=8,
@@ -151,9 +156,9 @@ def test_engine_rejects_request_exceeding_max_len():
     assert eng.max_pages == 4
     req = Request(rid=0, prompt=_prompts([20], seed=7)[0],
                   max_new_tokens=20)             # needs 5 > 4 pages
-    eng.submit(req)
-    with pytest.raises(RuntimeError, match="at most"):
-        eng.run()
+    eng.run([req])
+    assert req.failed and req.status == Status.REJECTED
+    assert "at most" in req.error and eng.rejected == [req]
     assert len(eng.free_pages) == eng.num_pages  # nothing leaked
 
 
@@ -550,3 +555,355 @@ def test_pending_cow_source_survives_same_drain_reclaim():
                         max_new_tokens=r.max_new_tokens, prefix_len=12)
         solo.run([probe])
         assert r.tokens == probe.tokens, (r.rid, r.tokens, probe.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Failure handling: preemption + bit-exact resume, lifecycle, auditor, faults
+# ---------------------------------------------------------------------------
+
+from repro.runtime.faults import FaultEvent, FaultPlan     # noqa: E402
+from repro.runtime.watchdog import Watchdog                # noqa: E402
+
+
+def _qcfg(kv_bits=8):
+    qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, kv_bits=kv_bits,
+                     mode="int")
+    cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                      kv_heads=2, d_ff=96, vocab=64, dtype="float32",
+                      q_chunk=16, remat=False, quant=qc)
+    params = integerize_params(
+        lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
+    return cfg, params
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_preempt_resume_bit_identical(backend, kv_bits):
+    """Tentpole acceptance: a victim preempted under pool pressure and
+    resumed (prompt re-prefill + recorded-token replay through the shared
+    decode step) produces a token stream bit-identical to an uninterrupted
+    run — on both backends, at kv_bits 8 and 4 — with the per-step audit
+    green throughout and the pool fully conserved afterwards."""
+    cfg, params = _qcfg(kv_bits)
+    rng = np.random.RandomState(3)
+    vic_prompt = rng.randint(0, 64, 16).astype(np.int32)
+    hi_prompt = rng.randint(0, 64, 16).astype(np.int32)
+    kw = dict(batch_size=2, max_len=64, page_size=8, prefill_buckets=(32,))
+    with dispatch.use_backend(backend):
+        base = PagedEngine(cfg, params, audit_every=1, **kw)
+        probe = Request(rid=0, prompt=vic_prompt, max_new_tokens=8)
+        base.run([probe])
+
+        # 4 pages = exactly one (16 prompt + 8 gen)/ps=8 request: admitting
+        # the high-priority request REQUIRES preempting the victim.
+        eng = PagedEngine(cfg, params, audit_every=1,
+                          **{**kw, "num_pages": 4})
+        eng._step = base._step                     # shared traces
+        eng._admit_prefill = base._admit_prefill
+        victim = Request(rid=1, prompt=vic_prompt, max_new_tokens=8)
+        eng.submit(victim)
+        for _ in range(4):
+            eng.step()
+        mid = len(victim.tokens)
+        assert 2 <= mid < 8                        # genuinely mid-flight
+        hi = Request(rid=2, prompt=hi_prompt, max_new_tokens=2, priority=5)
+        eng.submit(hi)
+        while eng.step():
+            pass
+    assert eng.preempt_count >= 1 and eng.resume_count >= 1
+    assert victim.preemptions >= 1
+    assert hi.done and not hi.failed
+    assert victim.done and not victim.failed
+    assert victim.tokens == probe.tokens, (victim.tokens, probe.tokens)
+    assert eng.violations == []                    # replay never diverged
+    assert eng.alloc.free_count == eng.num_pages   # no page leaked
+
+
+def test_priority_admission_order():
+    """Same-drain admissions run highest-priority-first; FIFO inside a
+    priority class."""
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, **{**ENGINE_KW, "batch_size": 1})
+    lo = Request(rid=0, prompt=_prompts([8], seed=20)[0], max_new_tokens=2)
+    hi = Request(rid=1, prompt=_prompts([8], seed=21)[0], max_new_tokens=2,
+                 priority=3)
+    eng.run([lo, hi])                       # submitted lo first
+    assert hi.admitted_step < lo.admitted_step
+    assert lo.done and hi.done
+
+
+def test_cancel_queued_and_midflight():
+    """Cancellation: a queued request dies unadmitted; a running one
+    releases its row and pages mid-flight; the batch neighbour's stream is
+    untouched (== solo)."""
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, audit_every=1, **ENGINE_KW)
+    running = Request(rid=0, prompt=_prompts([10], seed=22)[0],
+                      max_new_tokens=12)
+    nbr = Request(rid=1, prompt=_prompts([13], seed=23)[0],
+                  max_new_tokens=6)
+    queued = Request(rid=2, prompt=_prompts([9], seed=24)[0],
+                     max_new_tokens=4, priority=-1)
+    for r in (running, nbr, queued):
+        eng.submit(r)
+    eng.step(); eng.step()
+    assert running.status == Status.RUNNING
+    queued.cancel()
+    assert eng.cancel(running.rid)          # by rid, via the engine API
+    assert not eng.cancel(999)              # unknown rid
+    while eng.step():
+        pass
+    assert running.status == Status.CANCELLED and running.failed
+    assert 0 < len(running.tokens) < 12     # partial output kept
+    assert queued.status == Status.CANCELLED and queued.admitted_step == -1
+    assert eng.cancelled == [queued, running] or \
+        eng.cancelled == [running, queued]
+    assert nbr.done and not nbr.failed
+    assert nbr.tokens == _run_solo(cfg, params, nbr.prompt, 6)
+    assert eng.alloc.free_count == eng.num_pages
+    assert dispatch.STATS["cancelled"] >= 2
+
+
+def test_ttl_and_deadline_expire_queued_requests():
+    """TTL (engine steps) and deadline (wall clock) expire requests while
+    QUEUED — decode never stalls behind an unservable queue — and an
+    already-running request is never expired by either."""
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, audit_every=1,
+                      **{**ENGINE_KW, "batch_size": 1})
+    runner = Request(rid=0, prompt=_prompts([10], seed=25)[0],
+                     max_new_tokens=10)
+    eng.submit(runner)
+    eng.step()
+    assert runner.status == Status.RUNNING
+    runner.deadline_s = 0.0                    # already RUNNING: immune
+    ttl = Request(rid=1, prompt=_prompts([8], seed=26)[0],
+                  max_new_tokens=2, ttl_steps=2)
+    dead = Request(rid=2, prompt=_prompts([8], seed=27)[0],
+                   max_new_tokens=2, deadline_s=0.0)      # queued: expires
+    eng.run([ttl, dead])
+    assert runner.done and not runner.failed and len(runner.tokens) == 10
+    assert ttl.status == Status.TIMED_OUT and "2 queued steps" in ttl.error
+    assert dead.status == Status.TIMED_OUT and "deadline" in dead.error
+    assert len(eng.expired) == 2
+    assert all(r is ttl or r is dead for r in eng.expired)
+    assert dispatch.STATS["expired"] >= 2
+
+
+def test_preemption_backoff_then_terminal_rejection():
+    """A request preempted more than ``max_preemptions`` times is
+    terminally REJECTED with a recorded error instead of thrashing."""
+    cfg, params = _setup()
+    kw = {**ENGINE_KW, "num_pages": 4, "batch_size": 2}
+    eng = PagedEngine(cfg, params, audit_every=1, max_preemptions=0,
+                      preempt_after_steps=1, **kw)
+    victim = Request(rid=0, prompt=_prompts([16], seed=28)[0],
+                     max_new_tokens=8)
+    eng.submit(victim)
+    for _ in range(3):
+        eng.step()
+    hi = Request(rid=1, prompt=_prompts([16], seed=29)[0],
+                 max_new_tokens=2, priority=5)
+    eng.submit(hi)
+    while eng.step():
+        pass
+    assert hi.done and not hi.failed
+    assert victim.status == Status.REJECTED
+    assert "preempted 1 times" in victim.error
+    assert eng.alloc.free_count == eng.num_pages
+
+
+def test_preemption_backoff_defers_readmission():
+    """After preemption the victim sits out ``2^(n-1)`` steps (capped):
+    its readmission step is gated by ``_not_before_step`` even though a
+    row is free the whole time."""
+    cfg, params = _setup()
+    kw = {**ENGINE_KW, "num_pages": 4, "batch_size": 2}
+    eng = PagedEngine(cfg, params, audit_every=1, backoff_cap=4, **kw)
+    victim = Request(rid=0, prompt=_prompts([16], seed=30)[0],
+                     max_new_tokens=8, priority=0)
+    eng.submit(victim)
+    for _ in range(3):
+        eng.step()
+    hi = Request(rid=1, prompt=_prompts([16], seed=31)[0],
+                 max_new_tokens=2, priority=5)
+    eng.submit(hi)
+    eng.step()                                  # preempts victim mid-drain
+    assert victim.status == Status.QUEUED and victim.preemptions == 1
+    gate = victim._not_before_step
+    # 2^0 backoff: gated past the preempting drain (which ran at
+    # step_count - 1), readmittable earliest in the NEXT drain
+    assert gate == eng.step_count
+    while eng.step():
+        pass
+    assert victim.done and victim.admitted_step >= gate
+
+
+def test_nan_quarantine_recovers_bit_exact():
+    """An injected NaN row is detected, quarantined (preempt + clean-state
+    recompute) and the request STILL finishes with the fault-free token
+    stream; the neighbour row never notices."""
+    cfg, params = _setup()
+    base = PagedEngine(cfg, params, audit_every=1, **ENGINE_KW)
+    a0 = Request(rid=0, prompt=_prompts([12], seed=32)[0], max_new_tokens=8)
+    b0 = Request(rid=1, prompt=_prompts([9], seed=33)[0], max_new_tokens=8)
+    base.run([a0, b0])
+
+    dispatch.reset_stats()
+    plan = FaultPlan(at=[FaultEvent(step=3, nan_row=0)])
+    eng = PagedEngine(cfg, params, audit_every=1, fault_plan=plan,
+                      **ENGINE_KW)
+    eng._step = base._step
+    eng._admit_prefill = base._admit_prefill
+    a = Request(rid=0, prompt=a0.prompt, max_new_tokens=8)
+    b = Request(rid=1, prompt=b0.prompt, max_new_tokens=8)
+    eng.run([a, b])
+    assert dispatch.STATS["quarantined"] == 1
+    assert dispatch.STATS["resumes"] == 1
+    assert a.done and b.done and not a.failed and not b.failed
+    assert a.tokens == a0.tokens and b.tokens == b0.tokens
+    assert eng.violations == []
+    assert eng.alloc.free_count == eng.num_pages
+
+
+def test_forced_xla_fallback_step_tokens_unchanged():
+    """A forced pallas->XLA fallback step serves through the XLA twin and
+    must not change one token (backend bit-parity is the repo's standing
+    guarantee — this fault doubles as its in-engine detector)."""
+    cfg, params = _setup()
+    base = PagedEngine(cfg, params, audit_every=1, **ENGINE_KW)
+    r0 = Request(rid=0, prompt=_prompts([11], seed=34)[0], max_new_tokens=6)
+    base.run([r0])
+
+    dispatch.reset_stats()
+    plan = FaultPlan(at=[FaultEvent(step=s, force_xla=True)
+                         for s in (1, 3)])
+    eng = PagedEngine(cfg, params, audit_every=1, fault_plan=plan,
+                      **ENGINE_KW)
+    eng._step = base._step
+    eng._admit_prefill = base._admit_prefill
+    r = Request(rid=0, prompt=r0.prompt, max_new_tokens=6)
+    eng.run([r])
+    assert dispatch.STATS["forced_xla_steps"] == 2
+    assert r.tokens == r0.tokens
+
+
+def test_fault_steal_forces_preemption_and_recovery():
+    """Injected allocator exhaustion (pages stolen and held) squeezes a
+    late admission into preempting the victim; after the holds release
+    everything completes bit-identically and the pool conserves."""
+    cfg, params = _setup()
+    kw = {**ENGINE_KW, "num_pages": 8}
+    base = PagedEngine(cfg, params, audit_every=1, **kw)
+    a0 = Request(rid=0, prompt=_prompts([14], seed=35)[0], max_new_tokens=8)
+    b0 = Request(rid=1, prompt=_prompts([10], seed=36)[0], max_new_tokens=4)
+    base.run([a0]); base2 = PagedEngine(cfg, params, audit_every=1, **kw)
+    base2._step = base._step; base2._admit_prefill = base._admit_prefill
+    base2.run([b0])
+
+    dispatch.reset_stats()
+    plan = FaultPlan(at=[FaultEvent(step=2, steal_pages=6, steal_hold=3)])
+    eng = PagedEngine(cfg, params, audit_every=1, fault_plan=plan,
+                      preempt_after_steps=1, **kw)
+    eng._step = base._step
+    eng._admit_prefill = base._admit_prefill
+    a = Request(rid=0, prompt=a0.prompt, max_new_tokens=8)
+    eng.submit(a)
+    eng.step(); eng.step()                     # a runs; steal lands @2
+    b = Request(rid=1, prompt=b0.prompt, max_new_tokens=4)
+    eng.submit(b)                              # must squeeze past the hold
+    while eng.step():
+        pass
+    assert a.done and b.done and not a.failed and not b.failed
+    assert a.tokens == a0.tokens and b.tokens == b0.tokens
+    assert eng._fault_held == []               # holds released
+    assert eng.alloc.free_count == eng.num_pages
+    assert dispatch.STATS["preemptions"] >= 1
+
+
+def test_watchdog_wired_into_engine_steps():
+    """Satellite: injected stalls inside the watchdog window trip the EMA
+    straggler detector and surface in STATS['watchdog_fires']."""
+    cfg, params = _setup()
+    # warm the traces on a throwaway engine so compile time never lands
+    # inside the watchdog's EMA window
+    base = PagedEngine(cfg, params, **ENGINE_KW)
+    base.run([Request(rid=9, prompt=_prompts([8], seed=39)[0],
+                      max_new_tokens=10)])
+    dispatch.reset_stats()
+    plan = FaultPlan(at=[FaultEvent(step=s, stall_s=0.25)
+                         for s in (6, 7)])
+    wd = Watchdog(threshold=4.0, patience=1)
+    eng = PagedEngine(cfg, params, fault_plan=plan, watchdog=wd,
+                      **ENGINE_KW)
+    eng._step = base._step
+    eng._admit_prefill = base._admit_prefill
+    r = Request(rid=0, prompt=_prompts([8], seed=37)[0], max_new_tokens=10)
+    eng.run([r])
+    assert wd.flags >= 1
+    assert dispatch.STATS["watchdog_fires"] >= 1
+
+
+def test_engine_audit_detects_manufactured_corruption():
+    """The auditor actually bites: a leaked refcount and a poisoned page
+    scale are both reported (and counted) instead of passing silently."""
+    cfg, params = _setup()
+    eng = PagedEngine(cfg, params, **ENGINE_KW)
+    r = Request(rid=0, prompt=_prompts([10], seed=38)[0], max_new_tokens=12)
+    eng.submit(r)
+    eng.step(); eng.step()
+    assert eng.audit(raise_on_fail=False) == []     # healthy mid-flight
+    dispatch.reset_stats()
+    eng.alloc.refs[eng.row_pages[0][0]] += 1        # phantom holder
+    v = eng.audit(raise_on_fail=False)
+    assert any("refcount" in x for x in v)
+    eng.alloc.refs[eng.row_pages[0][0]] -= 1
+    page = eng.row_pages[0][0]
+
+    def poison(c):
+        out = {}
+        for k, leaf in c.items():
+            if isinstance(leaf, dict):
+                out[k] = poison(leaf)
+            elif k == "page_k_scale":
+                out[k] = leaf.at[..., page].set(jnp.nan)
+            else:
+                out[k] = leaf
+        return out
+
+    eng.cache = poison(eng.cache)
+    v = eng.audit(raise_on_fail=False)
+    assert any("non-finite page scale" in x for x in v)
+    with pytest.raises(RuntimeError, match="audit failed"):
+        eng.audit(raise_on_fail=True)
+    assert dispatch.STATS["audit_failures"] >= 2
+
+
+@pytest.mark.smoke
+def test_serve_graceful_shutdown_reports_partial_outputs(capsys):
+    """Satellite: the serve CLI's preemption path (--preempt-after-step
+    stands in for SIGTERM/SIGUSR1) stops admitting, keeps partial
+    outputs, flags the JSON report "preempted": true and exits with
+    PREEMPTED_EXIT_CODE."""
+    import json as _json
+
+    from repro.launch import serve
+    from repro.runtime.preemption import PREEMPTED_EXIT_CODE
+    prev = dispatch.get_backend()
+    with pytest.raises(SystemExit) as ex:
+        try:
+            serve.main(["--arch", "qwen2.5-32b", "--mode", "int",
+                        "--batch", "2", "--requests", "2",
+                        "--prompt-len", "8", "--gen", "12",
+                        "--page-size", "8", "--preempt-after-step", "3",
+                        "--json"])
+        finally:
+            dispatch.set_backend(prev)
+    assert ex.value.code == PREEMPTED_EXIT_CODE
+    out = capsys.readouterr().out
+    payload = _json.loads(out[out.index("{"):])
+    assert payload["preempted"] is True
+    assert "failures" in payload
+    statuses = {s["status"] for s in payload["per_seq"]}
+    assert "preempted" in statuses
+    assert any(0 < s["gen"] < 12 for s in payload["per_seq"])

@@ -36,3 +36,84 @@ def test_preemption_flag():
     assert should_stop()
     reset()
     assert not should_stop()
+
+
+def test_watchdog_counts_flags():
+    wd = Watchdog(threshold=3.0, patience=2)
+    for _ in range(5):
+        wd.start(); time.sleep(0.002); wd.stop()
+    wd.start(); time.sleep(0.03); wd.stop()      # one blip
+    assert wd.flags == 1 and wd.fired == 0       # flagged, never fired
+
+
+def test_preemption_signal_handler_records_signum():
+    """A real SIGUSR1 delivered to the process trips the flag via the
+    installed handler and records which signal it was."""
+    import os
+    import signal
+
+    from repro.runtime.preemption import install, last_signal
+
+    reset()
+    install()
+    assert last_signal() is None
+    os.kill(os.getpid(), signal.SIGUSR1)
+    assert should_stop()
+    assert last_signal() == signal.SIGUSR1
+    reset()
+    assert not should_stop() and last_signal() is None
+
+
+# ---------------------------------------------------------------------------
+# fault-injection harness (runtime/faults.py)
+# ---------------------------------------------------------------------------
+
+import jax.numpy as jnp                           # noqa: E402
+import numpy as np                                # noqa: E402
+
+from repro.runtime.faults import (FaultEvent,     # noqa: E402
+                                  FaultPlan, corrupt_rows)
+
+
+def test_fault_plan_is_deterministic():
+    """Identical arguments -> identical schedules, regardless of how the
+    engine later interleaves at_step() calls; different seeds differ."""
+    mk = lambda s: FaultPlan(seed=s, horizon=256, p_steal=0.1, p_stall=0.1,
+                             p_fallback=0.1, p_nan=0.1)
+    a, b = mk(7), mk(7)
+    assert a.summary() == b.summary()
+    for step in range(256):
+        ea, eb = a.at_step(step), b.at_step(step)
+        assert (ea is None) == (eb is None)
+        if ea is not None:
+            assert ea == eb
+    assert mk(8).summary() != a.summary()
+
+
+def test_fault_plan_probability_independence():
+    """Enabling one fault kind never shifts another kind's schedule (fixed
+    draw count per step): the steal steps with p_nan=0 match the steal
+    steps with p_nan=0.9."""
+    just_steal = FaultPlan(seed=3, horizon=512, p_steal=0.2)
+    both = FaultPlan(seed=3, horizon=512, p_steal=0.2, p_nan=0.9)
+    steals_a = {s for s, e in just_steal._events.items() if e.steal_pages}
+    steals_b = {s for s, e in both._events.items() if e.steal_pages}
+    assert steals_a == steals_b and steals_a
+
+
+def test_fault_plan_schedule_merges_pinned_events():
+    plan = FaultPlan(seed=0)                      # all probabilities 0
+    assert plan.at_step(5) is None
+    plan.schedule(FaultEvent(step=5, steal_pages=2, steal_hold=3))
+    plan.schedule(FaultEvent(step=5, nan_row=1))  # merges, not replaces
+    ev = plan.at_step(5)
+    assert ev.steal_pages == 2 and ev.nan_row == 1
+    assert plan.summary()["events"] == 1
+
+
+def test_corrupt_rows_poisons_only_named_rows():
+    logits = jnp.ones((3, 1, 8))
+    out = corrupt_rows(logits, [1])
+    assert not bool(jnp.any(jnp.isfinite(out[1])))
+    assert bool(jnp.all(jnp.isfinite(out[0])))
+    assert bool(jnp.all(jnp.isfinite(out[2])))
