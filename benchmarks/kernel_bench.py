@@ -19,7 +19,11 @@ ring (which always streams the batch-max live span for every row), and
 the ADMISSION section: a timed N-arrival admission drain, burst (one
 batched prefill, the PR-4 path) vs the same N arrivals dripped one per
 drain (the PR-3 cost model: N batch=1 prefills), both backends with
-pre-warmed jits.  The loops' ``stats`` snapshots also carry
+pre-warmed jits.  The LATENCY section measures decode inter-token
+latency while a burst admits: one-shot admission prefill (stall = the
+whole prompt) vs the chunked-prefill token-budget scheduler (stall
+bounded by the budget), with the analytic per-step token bound riding
+the ``--check`` guard.  The loops' ``stats`` snapshots also carry
 ``STATS["blocks"]`` — the dispatch layer's chosen tile sizes per shape,
 the baseline a future measured autotuner diffs against.
 ``--quick`` restricts to the smallest shapes (CI-sized run).
@@ -71,6 +75,12 @@ PREEMPT_SHAPES = [
     (2048, 64, 256, 128, 8, 128, 8),     # preempted early in generation
     (2048, 64, 256, 128, 8, 128, 4),
     (8192, 192, 256, 128, 8, 128, 8),    # long context, deep into decode
+]
+# (prompt_tokens, chunk_tokens, prefill_budget_tokens)
+LATENCY_SHAPES = [
+    (96, 16, 16),                        # the timed-loop scenario below
+    (2048, 128, 256),                    # chat prompt under serving budget
+    (8192, 256, 256),                    # long-context admission
 ]
 
 
@@ -244,6 +254,30 @@ def preempt_resume_analytic(prompt, gen, max_new, page_size, hkv, d,
         # recompute bytes per freed byte: < 1 means preemption is cheaper
         # than the capacity it returns (it always is while gen << max_len)
         "rewrite_per_freed_byte": (prompt + gen) / (pages * page_size),
+    }
+
+
+def burst_latency_analytic(prompt, chunk, budget):
+    """Inter-token stall while a prompt admits: one-shot vs budgeted.
+
+    With one-shot admission prefill, every running decode stalls for the
+    WHOLE prompt (the serial prefill blocks the step).  Chunked prefill
+    under a token budget bounds the prompt tokens interleaved into any
+    single step by ``max(chunk, budget floored to whole chunks)`` (the
+    packer's floor of one chunk per step), so the worst-case inter-token
+    stall is a constant set by configuration, not by the longest arrival.
+    ``budgeted_max_tokens_per_step`` is the guarded bound: a scheduler
+    change that lets more prompt tokens into one step is a latency
+    regression.
+    """
+    c = max(1, min(chunk, prompt))
+    per_step = min(max(c, budget - budget % c), prompt)
+    return {
+        "prompt": prompt, "chunk": chunk, "budget": budget,
+        "oneshot_stall_tokens": prompt,
+        "budgeted_max_tokens_per_step": per_step,
+        "prefill_steps": -(-prompt // per_step),
+        "stall_reduction": prompt / per_step,
     }
 
 
@@ -476,6 +510,93 @@ def preempt_loop(quick=False):
     return res
 
 
+def burst_latency(quick=False):
+    """Timed inter-token latency of a running decode through a burst.
+
+    A foreground request decodes while two long prompts arrive, under two
+    schedulers on the same engine: one-shot admission prefill (the
+    pre-chunking path — the whole burst prefills inside one step, so the
+    foreground stalls for prompt-length work) and chunked prefill under a
+    16-token/step budget (the stall is bounded by the budget).  Per-step
+    wall p50/p99 while the foreground runs are the latency story (CPU
+    numbers — relative only); the structural counters are the guarantees:
+    ``budgeted`` never spends more prompt tokens in one step than the
+    analytic bound, ``oneshot`` provably spends the whole burst in one,
+    and the foreground's tokens are bit-identical under both schedulers
+    (chunking is invisible in the streams).  Jits pre-warmed per arm.
+    """
+    import numpy as np
+
+    from repro.kernels import dispatch
+    from repro.launch.engine import PagedEngine, Request
+
+    cfg, params = _bench_lm()
+    rng = np.random.RandomState(0)
+    long_len = 48 if quick else 96
+    chunk = budget = 16
+    fg_prompt = rng.randint(0, cfg.vocab, 8).astype(np.int32)
+    long_prompts = [rng.randint(0, cfg.vocab, long_len).astype(np.int32)
+                    for _ in range(2)]
+    arms = {
+        "oneshot": dict(prefill_buckets=(long_len,)),
+        "budgeted": dict(prefill_buckets=(chunk,), prefill_chunk=chunk,
+                         prefill_budget=budget),
+    }
+
+    def run_arm(mode, share_from=None):
+        eng = PagedEngine(cfg, params, batch_size=3,
+                          max_len=long_len + 32, page_size=8, **arms[mode])
+        if share_from is not None:
+            eng._step = share_from._step
+            eng._admit_prefill = share_from._admit_prefill
+        fg = Request(rid=0, prompt=fg_prompt, max_new_tokens=24)
+        eng.submit(fg)
+        eng.step()                               # fg admitted, decoding
+        for i, p in enumerate(long_prompts):
+            eng.submit(Request(rid=1 + i, prompt=p, max_new_tokens=2))
+        dts, spends = [], []
+        while not fg.done:
+            t0 = time.perf_counter()
+            s0 = eng.prefill_tokens
+            if not eng.step():
+                break
+            dts.append(time.perf_counter() - t0)
+            spends.append(eng.prefill_tokens - s0)
+        while eng.step():
+            pass
+        return eng, fg, dts, spends
+
+    bound = burst_latency_analytic(long_len, chunk, budget)[
+        "budgeted_max_tokens_per_step"]
+    res = {}
+    for backend in ("xla", "pallas"):
+        with dispatch.use_backend(backend):
+            out = {"long_len": long_len, "chunk": chunk, "budget": budget,
+                   "requests": len(long_prompts)}
+            fg_tokens = {}
+            for mode in arms:
+                warm, _, _, _ = run_arm(mode)    # compile the arm's traces
+                eng, fg, dts, spends = run_arm(mode, warm)
+                assert fg.done and not fg.failed
+                dts.sort()
+                fg_tokens[mode] = list(fg.tokens)
+                out[mode] = {
+                    "p50_step_ms": dts[len(dts) // 2] * 1e3,
+                    "p99_step_ms": dts[int(len(dts) * 0.99)] * 1e3,
+                    "max_prefill_tokens_step": max(spends, default=0),
+                    "prefill_chunks": eng.prefill_chunks,
+                }
+            # the structural guarantees (wall-clock-free)
+            out["budget_bounded"] = \
+                out["budgeted"]["max_prefill_tokens_step"] <= bound
+            out["oneshot_stalls_whole_burst"] = \
+                out["oneshot"]["max_prefill_tokens_step"] >= long_len
+            out["fg_bit_identical"] = \
+                fg_tokens["oneshot"] == fg_tokens["budgeted"]
+            res[backend] = out
+    return res
+
+
 def paged_loop(quick=False):
     """Timed multi-tenant continuous-batching loop under both backends.
 
@@ -618,6 +739,14 @@ def run(quick=False):
                          for sh in PREEMPT_SHAPES],
             "loop": preempt_loop(quick=quick),
         },
+        # chunked prefill: inter-token stall under an arrival burst,
+        # one-shot admission vs the token-budget packer (analytic bound
+        # + timed foreground-decode p50/p99 on both backends).
+        "latency": {
+            "analytic": [burst_latency_analytic(*sh)
+                         for sh in LATENCY_SHAPES],
+            "loop": burst_latency(quick=quick),
+        },
     }
     return rows, design, decode, paged
 
@@ -634,6 +763,7 @@ GUARDED_PAGED = ("paged_bytes_per_step", "paged_macs_per_step")
 GUARDED_PREFIX = ("shared_prefill_tokens", "shared_pages_consumed",
                   "shared_kv_bytes_written")
 GUARDED_PREEMPT = ("resume_recompute_tokens", "resume_kv_bytes_rewritten")
+GUARDED_LATENCY = ("budgeted_max_tokens_per_step",)
 
 
 def analytic_payload():
@@ -647,7 +777,9 @@ def analytic_payload():
                   "prefix": {"analytic": [prefix_burst_analytic(*sh)
                                           for sh in PREFIX_SHAPES]},
                   "preemption": {"analytic": [preempt_resume_analytic(*sh)
-                                              for sh in PREEMPT_SHAPES]}},
+                                              for sh in PREEMPT_SHAPES]},
+                  "latency": {"analytic": [burst_latency_analytic(*sh)
+                                           for sh in LATENCY_SHAPES]}},
     }
 
 
@@ -701,6 +833,16 @@ def check_regressions(cur, prev):
             if old and e[k] > old[k]:
                 regs.append(f"preemption[prompt={e['prompt']},"
                             f"gen={e['gen']},kv={e['kv_bits']}]."
+                            f"{k}: {old[k]} -> {e[k]}")
+    lkey = ("prompt", "chunk", "budget")
+    prev_l = by_key(prev.get("paged", {}).get("latency", {})
+                    .get("analytic", []), lkey)
+    for e in cur["paged"]["latency"]["analytic"]:
+        old = prev_l.get(tuple(str(e[f]) for f in lkey))
+        for k in GUARDED_LATENCY:
+            if old and e[k] > old[k]:
+                regs.append(f"latency[prompt={e['prompt']},"
+                            f"chunk={e['chunk']},budget={e['budget']}]."
                             f"{k}: {old[k]} -> {e[k]}")
     return regs
 
@@ -801,6 +943,20 @@ def main(argv=None):
               f"resume_tokens={r['resume_recompute_tokens']}"
               f"(replay={r['resume_replay_steps']}),"
               f"bit_identical={r['bit_identical']}")
+    for a in paged["latency"]["analytic"]:
+        print(f"burst_latency,prompt={a['prompt']},chunk={a['chunk']},"
+              f"budget={a['budget']},"
+              f"oneshot_stall={a['oneshot_stall_tokens']},"
+              f"budgeted_max_per_step={a['budgeted_max_tokens_per_step']},"
+              f"stall_reduction={a['stall_reduction']:.1f}x")
+    for backend, r in paged["latency"]["loop"].items():
+        print(f"burst_latency[{backend}],long={r['long_len']},"
+              f"oneshot_p99={r['oneshot']['p99_step_ms']:.1f}ms"
+              f"(max_tok={r['oneshot']['max_prefill_tokens_step']}),"
+              f"budgeted_p99={r['budgeted']['p99_step_ms']:.1f}ms"
+              f"(max_tok={r['budgeted']['max_prefill_tokens_step']}),"
+              f"budget_bounded={r['budget_bounded']},"
+              f"fg_bit_identical={r['fg_bit_identical']}")
 
     if args.json:
         payload = {"kernels": rows, "attention_design": design,

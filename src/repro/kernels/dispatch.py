@@ -106,6 +106,12 @@ STATS = {"qlinear_pallas": 0, "qlinear_xla": 0,
          "preemptions": 0, "resumes": 0, "cancelled": 0, "expired": 0,
          "watchdog_fires": 0, "audit_failures": 0, "forced_xla_steps": 0,
          "quarantined": 0,
+         # admission-prefill accounting, bumped by launch/engine.py:
+         # logical admission prefills (one per prompt/prefix cut plan, the
+         # PR-4 burst-of-N==one-call quantity), ragged chunk launches
+         # (>= calls once chunked prefill engages), and real unpadded
+         # prompt tokens prefilled.
+         "prefill_calls": 0, "prefill_chunks": 0, "prefill_tokens": 0,
          # chosen tile sizes per (op, shape) — the baseline the future
          # measured autotuner (ROADMAP) diffs against; serialized by
          # kernel_bench --json and the serve CLI report.

@@ -35,16 +35,62 @@ Request state machine
 
 Every request moves through ``Request.status``::
 
-    QUEUED ──admit──> RUNNING ──EOS / max_new──────────> DONE
-      │  ▲              │
-      │  └─requeue──────┤ victim preemption / NaN quarantine
-      │     (capped       (pages released; recompute re-enters the
-      │      backoff)      admission path; > max_preemptions -> REJECTED)
-      │                 │
+    QUEUED ──admit──> PREFILLING ──final chunk──> RUNNING ──EOS/max_new──> DONE
+      │  ▲            (chunked admission:           │
+      │  │             row frozen at pos -1         │
+      │  │             while prompt chunks land)    │
+      │  └─requeue──────────┴───────────────────────┤ victim preemption /
+      │     (capped backoff; a mid-prefill victim     NaN quarantine
+      │      restarts from chunk 0; recompute         (pages released;
+      │      re-enters the admission path;            recompute requeued)
+      │      > max_preemptions -> REJECTED)         │
       ├─ttl/deadline──> TIMED_OUT      (expired while queued)
       ├─cancel────────> CANCELLED      (queued or mid-flight; pages freed)
-      ├─impossible────> REJECTED       (over bucket / page table / pool)
+      ├─impossible────> REJECTED       (page table / pool too small)
       └─shutdown──────> PREEMPTED      (graceful drain: partial output kept)
+
+One-shot admissions (no chunking configured, tail within the largest
+prefill bucket) skip PREFILLING: they prefill inside the admitting drain
+and enter decode the same step, exactly the PR-4 path.
+
+Chunked prefill & token-budget scheduling
+=========================================
+
+With ``prefill_chunk`` / ``prefill_budget`` configured (vLLM /
+Sarathi-style), every admission prefills as a sequence of page-aligned
+chunks instead of one monolithic launch; prompts whose tail exceeds the
+largest prefill bucket ALWAYS chunk (they are admitted, no longer
+rejected).  Invariants:
+
+- **Canonical cut plan.**  Chunk boundaries are a pure function of
+  (prompt length, declared prefix length, ``chunk_tokens``): after the
+  first chunk every boundary falls on a multiple of ``chunk_tokens`` — a
+  multiple of ``page_size`` — so no physical page ever mixes two chunks'
+  activation-scale grids, and chunk i+1 attends chunks 0..i through
+  exactly the stored-codes / per-page-scales path
+  (``prefix_prefill_attention``) that PR-5 prefix sharing proved out.
+- **The budget packs, never re-cuts.**  Each engine step decodes every
+  RUNNING row and launches as many pending chunks as fit
+  ``prefill_budget`` tokens (round-robin over PREFILLING rows in
+  admission order, with a floor of one chunk per step so progress is
+  guaranteed).  The budget decides WHICH STEP a chunk launches — never
+  where its boundaries fall — so the written KV codes and every
+  generated token are bit-identical under any budget, on both backends,
+  at kv_bits 8 and 4: the same scheduling-invariance contract as PR-4
+  batched admission and PR-5 sharing.
+- **Frozen rows.**  A PREFILLING row holds its full worst-case page
+  reservation but sits at ``pos = -1``: the shared jitted decode step
+  treats it as inactive (attends nothing; masked writes land in the
+  TRASH page).  Decode stall per step is therefore bounded by the chunk
+  budget, not by the longest queued prompt.
+- **Preemption composes.**  A mid-prefill victim (or a cancel /
+  shutdown) releases its pages like any other row; on readmission the
+  cut plan restarts from chunk 0 and lands bit-identical codes.
+
+Prefill accounting: ``prefill_calls`` counts logical admission prefills
+(launches that BEGIN at least one request's cut plan — a burst of N
+same-bucket arrivals still costs 1), ``prefill_chunks`` every ragged
+launch, ``prefill_tokens`` real (unpadded) prompt tokens prefilled.
 
 Failure semantics
 =================
@@ -79,10 +125,11 @@ Failure semantics
   can therefore never stall decode.  :meth:`Request.cancel` (or
   :meth:`PagedEngine.cancel`) takes effect at the next step: a queued
   request is dropped, a running one releases its row and pages
-  mid-flight.  Requests that can NEVER be admitted (prompt over the
-  largest prefill bucket, worst-case pages over the page-table row or the
-  whole pool) are rejected up front with ``Request.error`` instead of
-  blocking the queue head forever.
+  mid-flight.  Requests that can NEVER be admitted (worst-case pages
+  over the page-table row or the whole pool) are rejected up front with
+  ``Request.error`` instead of blocking the queue head forever; prompts
+  over the largest prefill bucket are no longer in that class — they
+  admit through the chunked-prefill path.
 - **NaN / overflow quarantine.**  After every step the engine checks each
   active row's logits for finiteness (the dequant epilogue is the one
   place integer serving can overflow).  A non-finite row is QUARANTINED:
@@ -113,10 +160,11 @@ Failure semantics
 Scheduling policy (deliberately simple, deterministic): priority-ordered
 (FIFO within a priority class) admission with worst-case page
 reservation, ONE batched admission prefill per (prefix, bucket) group per
-drain, per-sequence EOS eviction, and the prefix registry / CoW machinery
-described above.  A blocked (but servable) request stops admission behind
-it within its scan — except requests in preemption backoff, which are
-skipped without blocking.
+drain (ONE ragged launch per (chunk offset, bucket) group per step on
+the chunked path), per-sequence EOS eviction, and the prefix registry /
+CoW machinery described above.  A blocked (but servable) request stops
+admission behind it within its scan — except requests in preemption
+backoff, which are skipped without blocking.
 """
 from __future__ import annotations
 
@@ -139,6 +187,7 @@ from repro.runtime.watchdog import Watchdog
 class Status:
     """Request lifecycle states (see the module docstring's diagram)."""
     QUEUED = "queued"
+    PREFILLING = "prefilling"     # admitted, prompt chunks still landing
     RUNNING = "running"
     DONE = "done"
     CANCELLED = "cancelled"
@@ -268,6 +317,8 @@ class Request:
     _not_before_step: int = 0             # preemption backoff gate
     _replay: Optional[list] = None        # resume: tokens left to replay
     _resuming: bool = False               # admitted as a recompute
+    _chunk_start: int = 0                 # first tail-chunk offset (= prefix)
+    _chunk_pos: int = 0                   # next prompt offset to prefill
 
     def cancel(self):
         """Request cancellation; the engine honours it at its next step."""
@@ -299,6 +350,8 @@ class PagedEngine:
     def __init__(self, cfg: lm.LMConfig, params, *, batch_size: int = 4,
                  max_len: int = 256, page_size: int = 16,
                  num_pages: Optional[int] = None, prefill_buckets=(64,),
+                 prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None,
                  max_preemptions: int = 3, preempt_after_steps: int = 8,
                  backoff_cap: int = 8, audit_every: int = 0,
                  audit_raises: bool = True,
@@ -310,6 +363,19 @@ class PagedEngine:
         self.num_pages = num_pages if num_pages is not None \
             else batch_size * self.max_pages
         self.prefill_buckets = tuple(sorted(prefill_buckets))
+        # Chunked-prefill knobs (module docstring): chunk size is clamped
+        # to the largest bucket and floored to a page multiple so every
+        # internal chunk boundary is page-aligned (one scale grid per
+        # physical page).  A budget without an explicit chunk size chunks
+        # at the budget itself.
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
+        c = prefill_chunk if prefill_chunk is not None else (
+            prefill_budget if prefill_budget is not None
+            else self.prefill_buckets[-1])
+        self.chunk_tokens = max(page_size,
+                                min(c, self.prefill_buckets[-1])
+                                // page_size * page_size)
         self.cache = lm.init_paged_cache(cfg, batch_size, max_len,
                                          page_size=page_size,
                                          num_pages=self.num_pages)
@@ -327,7 +393,9 @@ class PagedEngine:
         self.expired: list[Request] = []
         self.preempted_out: list[Request] = []   # terminal via shutdown()
         self.step_count = 0
-        self.prefill_calls = 0            # batched admission-prefill launches
+        self.prefill_calls = 0            # logical admission prefills
+        self.prefill_chunks = 0           # ragged chunk launches (>= calls)
+        self.prefill_tokens = 0           # real (unpadded) tokens prefilled
         self.prefix_prefills = 0          # chunk-1 (shared prefix) launches
         self.shared_prefix_hits = 0       # admissions served off the registry
         self.preempt_count = 0            # victim preemptions (incl. NaN)
@@ -385,6 +453,30 @@ class PagedEngine:
         if not self.sharing_enabled or not req.prefix_len:
             return 0
         return max(0, min(int(req.prefix_len), len(req.prompt) - 1))
+
+    # -- chunked prefill (module docstring: the cut plan is canonical) -----
+
+    def _chunking(self) -> bool:
+        """Whether a chunk size / token budget was configured."""
+        return (self.prefill_chunk is not None
+                or self.prefill_budget is not None)
+
+    def _is_chunked(self, req: Request, plen: int) -> bool:
+        """Whether this admission prefills through the PREFILLING path:
+        always when chunking is configured (so the budget bounds ALL
+        prefill work per step), otherwise only for tails the one-shot
+        path cannot express (over the largest bucket)."""
+        return self._chunking() or (len(req.prompt) - plen
+                                    > self.prefill_buckets[-1])
+
+    def _next_cut(self, cur: int, total: int) -> int:
+        """Next chunk boundary after ``cur``: the following multiple of
+        ``chunk_tokens`` (page-aligned by construction), clamped to
+        ``total``.  A pure function of (cur, total, chunk_tokens) — the
+        budget decides only WHICH STEP a chunk launches, never where its
+        boundaries fall, so chunked prefill is scheduling-invariant."""
+        c = self.chunk_tokens
+        return min(total, (cur // c + 1) * c)
 
     def _prefix_key(self, toks) -> tuple:
         """Registry key: the chain of per-page token-block hashes."""
@@ -509,10 +601,16 @@ class PagedEngine:
         self.row_pages[row] = pages
         self.page_table[row] = -1
         self.page_table[row, :need] = pages
-        self.pos[row] = len(req.prompt)
+        chunked = self._is_chunked(req, plen)
+        # A chunked admission freezes its row (pos -1: the shared decode
+        # step attends nothing, masked writes land in the TRASH page)
+        # until the final chunk seeds generation (_launch_chunk).
+        self.pos[row] = -1 if chunked else len(req.prompt)
         self.row_req[row] = req
         req.admitted_step = self.step_count
-        req.status = Status.RUNNING
+        req.status = Status.PREFILLING if chunked else Status.RUNNING
+        req._chunk_start = plen
+        req._chunk_pos = plen
         req._resuming = bool(req.preemptions and req.tokens)
         self._dirty = True
 
@@ -593,12 +691,16 @@ class PagedEngine:
         always; equal priority only once ``req`` has starved for
         ``preempt_after_steps``.  Lowest priority first, then the
         youngest admission (least recompute waste).  Rows admitted in the
-        current drain (prefill still pending) are never victims."""
+        current drain are never victims; a PREFILLING row from an earlier
+        step may be — its chunk cursor resets on readmission, so the
+        resume re-prefills bit-exactly from chunk 0."""
         starved = (self.step_count - req._submit_step
                    >= self.preempt_after_steps)
         best = None
         for row, vreq in enumerate(self.row_req):
-            if vreq is None or id(vreq) in admitted_now or not vreq.tokens:
+            if vreq is None or id(vreq) in admitted_now or (
+                    not vreq.tokens
+                    and vreq.status != Status.PREFILLING):
                 continue
             if vreq.priority < req.priority or (starved
                                                 and vreq.priority
@@ -692,29 +794,20 @@ class PagedEngine:
 
     # -- drain / prefill ---------------------------------------------------
 
-    def _reject(self, req: Request, plen: int = 0):
-        if plen > self.prefill_buckets[-1]:
-            what = f"declared prefix length {plen}"
-        elif plen:
-            what = f"tail length {len(req.prompt) - plen}"
-        else:
-            what = f"prompt length {len(req.prompt)}"
-        req.error = (f"{what} exceeds the largest "
-                     f"prefill bucket {self.prefill_buckets[-1]}")
-        req.status = Status.REJECTED
-        req.finished_step = self.step_count
-        self.rejected.append(req)
-
     def _drain_queue(self):
         """Admit every admittable queued request, then prefill: first one
         chunk-1 launch per NEWLY REGISTERED prefix (so same-drain sharers
         read codes that already exist), then ONE batched tail prefill per
-        (prefix length, tail bucket) group.
+        (prefix length, tail bucket) group.  Chunked admissions (tail
+        over the largest bucket, or any admission once ``prefill_chunk``/
+        ``prefill_budget`` is configured) only reserve their pages and
+        enter PREFILLING here — their chunks launch under the token
+        budget in :meth:`_advance_prefills`.
 
         The scan runs in (priority desc, arrival) order.  Requests that
-        can NEVER run — prompt over the largest bucket, worst-case pages
-        over the page-table row or the whole pool — are rejected in place
-        (``Request.error``) instead of blocking the head of the queue.
+        can NEVER run — worst-case pages over the page-table row or the
+        whole pool — are rejected in place (``Request.error``, naming the
+        offending quantity) instead of blocking the head of the queue.
         Requests in preemption backoff are skipped without blocking.  A
         merely-blocked servable request stops admission behind it (FIFO
         within priority) after the pressure ladder — registry LRU
@@ -727,11 +820,6 @@ class PagedEngine:
         while i < len(self.queue):
             req = self.queue[i]
             plen = self._effective_prefix(req)
-            if (len(req.prompt) - plen > self.prefill_buckets[-1]
-                    or plen > self.prefill_buckets[-1]):
-                self.queue.pop(i)
-                self._reject(req, plen)
-                continue
             need = self._pages_needed(req)
             if need > self.max_pages:
                 self.queue.pop(i)
@@ -766,60 +854,111 @@ class PagedEngine:
         self._pending_cow.clear()
         groups: dict[tuple, list] = {}
         for req, row, plen, donor in admits:
+            if req.status == Status.PREFILLING:
+                continue                # chunked: _advance_prefills launches
             b = _bucket(len(req.prompt) - plen, self.prefill_buckets)
             groups.setdefault((plen, b), []).append((req, row))
         for plen, bucket in sorted(groups):
             self._prefill_group(bucket, groups[(plen, bucket)], plen)
 
+    def _count_chunk(self, tokens: int, first: bool):
+        """Prefill accounting (module docstring): one logical call per
+        plan-beginning launch, one chunk per launch, real tokens."""
+        if first:
+            self.prefill_calls += 1
+            dispatch.STATS["prefill_calls"] += 1
+        self.prefill_chunks += 1
+        self.prefill_tokens += tokens
+        dispatch.STATS["prefill_chunks"] += 1
+        dispatch.STATS["prefill_tokens"] += tokens
+
     def _prefill_prefix(self, req: Request, row: int, plen: int):
         """Chunk-1: prefill a newly registered prefix ONCE, into its pinned
-        pages.  A pure function of the prefix tokens (W=1, bucket from
-        ``plen``, pages only name where codes land), so every future
-        sharer — and this request's own solo baseline — reads exactly
-        these codes and scales.  Logits are discarded: generation is
-        seeded by the tail chunk."""
-        bucket = _bucket(plen, self.prefill_buckets)
+        pages.  A pure function of the prefix tokens (W=1, buckets from
+        the canonical cut plan, pages only name where codes land), so
+        every future sharer — and this request's own solo baseline —
+        reads exactly these codes and scales.  Logits are discarded:
+        generation is seeded by the tail chunk.
+
+        A prefix longer than ``chunk_tokens`` (or the largest bucket)
+        prefills as a sequence of page-aligned chunks — the same cut plan
+        as tail chunking — launched synchronously within this drain, so
+        same-drain sharers and CoW copies always read complete codes."""
         npre = -(-plen // self.page_size)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt[:plen]
         ptw = np.full((1, self.max_pages), -1, np.int32)
         ptw[0, :npre] = self.row_pages[row][:npre]
-        _, self.cache = self._admit_prefill(
-            self.params, {"tokens": jnp.asarray(toks),
-                          "lengths": jnp.asarray([plen], np.int32)},
-            self.cache, jnp.asarray([row], np.int32), jnp.asarray(ptw), 0)
-        self.prefill_calls += 1
+        one_shot = (plen <= self.prefill_buckets[-1]
+                    and not self._chunking())
+        cur = 0
+        while cur < plen:
+            end = plen if one_shot else self._next_cut(cur, plen)
+            bucket = _bucket(end - cur, self.prefill_buckets)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :end - cur] = req.prompt[cur:end]
+            _, self.cache = self._admit_prefill(
+                self.params, {"tokens": jnp.asarray(toks),
+                              "lengths": jnp.asarray([end - cur],
+                                                     np.int32)},
+                self.cache, jnp.asarray([row], np.int32),
+                jnp.asarray(ptw), cur)
+            self._count_chunk(end - cur, first=cur == 0)
+            cur = end
         self.prefix_prefills += 1
 
     def _prefill_group(self, bucket: int, group, prefix_len: int = 0):
         """One batched ragged admission prefill: W prompt TAILS of one
         (prefix, bucket) group land their KV codes directly in the shared
         pools at the reserved physical pages (lm.admission_prefill) — no
-        private batch=1 cache and no page-copy pass.  With a prefix, each
-        row's leading pages are the shared (or freshly prefilled) prefix
-        pages and the tail attends them through their stored codes.
+        private batch=1 cache and no page-copy pass.  The one-shot face
+        of :meth:`_launch_chunk` (every row's single chunk is both first
+        and final)."""
+        self._launch_chunk(prefix_len, bucket,
+                           [(req, row, len(req.prompt))
+                            for req, row in group])
 
-        A resumed row's prefill is bit-identical to its original one, so
-        its recomputed first token must equal the recorded one; the row
-        then re-enters decode in REPLAY mode instead of re-recording."""
-        w = len(group)
+    def _launch_chunk(self, start: int, bucket: int, items):
+        """One batched ragged prefill launch: W chunks sharing (start
+        offset, bucket).  ``items`` is [(req, row, end)] — prefill
+        ``req.prompt[start:end]`` into the row's reserved pages with
+        ``prefix_len=start``, so the chunk attends every already-written
+        token [0, start) through its stored codes and per-page scale
+        grids.  A pure function of (tokens, start, end) per row: batching
+        width and launch step never change the codes (the PR-4/PR-5
+        invariant, extended to chunks).
+
+        Rows whose chunk is FINAL (end == len(prompt)) take their first
+        generated token from the launch logits and enter decode; a
+        resumed recompute instead cross-checks the recorded first token
+        and re-enters decode in REPLAY mode — finishing immediately when
+        it was preempted after already recording its final token.
+        Non-final rows stay PREFILLING, frozen at pos -1."""
+        w = len(items)
         toks = np.zeros((w, bucket), np.int32)
         lens = np.zeros((w,), np.int32)
         ptw = np.full((w, self.max_pages), -1, np.int32)
         rows = np.zeros((w,), np.int32)
-        for j, (req, row) in enumerate(group):
-            tail = req.prompt[prefix_len:]
-            toks[j, :len(tail)] = tail
-            lens[j] = len(tail)
+        for j, (req, row, end) in enumerate(items):
+            seg = req.prompt[start:end]
+            toks[j, :len(seg)] = seg
+            lens[j] = len(seg)
             ptw[j] = self.page_table[row]
             rows[j] = row
         logits, self.cache = self._admit_prefill(
             self.params, {"tokens": jnp.asarray(toks),
                           "lengths": jnp.asarray(lens)},
-            self.cache, jnp.asarray(rows), jnp.asarray(ptw), prefix_len)
-        self.prefill_calls += 1
+            self.cache, jnp.asarray(rows), jnp.asarray(ptw), start)
+        self._count_chunk(int(lens.sum()),
+                          first=any(req._chunk_start == start
+                                    for req, _, _ in items))
         first = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        for j, (req, row) in enumerate(group):
+        for j, (req, row, end) in enumerate(items):
+            req._chunk_pos = end
+            if end < len(req.prompt):
+                continue                    # mid-prefill: row stays frozen
+            if req.status == Status.PREFILLING:
+                req.status = Status.RUNNING
+                self.pos[row] = len(req.prompt)
+                self._dirty = True
             if req._resuming:
                 if int(first[j]) != req.tokens[0]:
                     self._violation(
@@ -831,10 +970,60 @@ class PagedEngine:
                 req._resuming = False
                 self.resume_count += 1
                 dispatch.STATS["resumes"] += 1
+                if req._replay is None:
+                    # Preempted after already recording its final token
+                    # (EOS or max_new reached): finish NOW — the row must
+                    # not decode (and record) past its terminal state.
+                    self._maybe_finish(row, req.tokens[-1])
                 continue
             self.next_tok[row] = first[j]
             req.tokens.append(int(first[j]))
             self._maybe_finish(row, int(first[j]))
+
+    def _advance_prefills(self):
+        """Token-budget packer: launch pending chunks for PREFILLING rows.
+
+        Packs chunks round-robin over PREFILLING rows in admission order
+        until ``prefill_budget`` tokens are spent (unlimited when None),
+        with a floor of one chunk per step so a chunk larger than the
+        budget still makes progress.  Chunks sharing (start, bucket)
+        batch into one ragged launch; launches run in ascending start
+        order, so a row's chunk i+1 always reads codes chunk i already
+        wrote.  The budget changes only the launch schedule — the cut
+        plan (and therefore every code and token) is fixed by
+        :meth:`_next_cut`."""
+        pending = sorted(
+            (req.admitted_step, req._arrival, row)
+            for row, req in enumerate(self.row_req)
+            if req is not None and req.status == Status.PREFILLING)
+        if not pending:
+            return
+        order = [row for _, _, row in pending]
+        budget = self.prefill_budget
+        cursors = {row: self.row_req[row]._chunk_pos for row in order}
+        spent, taken = 0, []
+        progressed = True
+        while progressed and (budget is None or spent < budget):
+            progressed = False
+            for row in order:
+                req = self.row_req[row]
+                cur = cursors[row]
+                if cur >= len(req.prompt):
+                    continue
+                end = self._next_cut(cur, len(req.prompt))
+                if budget is not None and taken \
+                        and spent + (end - cur) > budget:
+                    continue
+                taken.append((req, row, cur, end))
+                cursors[row] = end
+                spent += end - cur
+                progressed = True
+        groups: dict[tuple, list] = {}
+        for req, row, cur, end in taken:
+            b = _bucket(end - cur, self.prefill_buckets)
+            groups.setdefault((cur, b), []).append((req, row, end))
+        for start, b in sorted(groups):
+            self._launch_chunk(start, b, groups[(start, b)])
 
     def _maybe_finish(self, row: int, tok: int):
         req = self.row_req[row]
@@ -904,6 +1093,14 @@ class PagedEngine:
                 v.append(f"row {row}: page_table mirror != row_pages")
             if np.any(self.page_table[row, len(pages):] != -1):
                 v.append(f"row {row}: table entries beyond the reservation")
+            if req.status is Status.PREFILLING:
+                if int(self.pos[row]) != -1:
+                    v.append(f"row {row}: PREFILLING row has pos "
+                             f"{int(self.pos[row])}, expected -1 (frozen)")
+                if not (0 <= req._chunk_pos < len(req.prompt)):
+                    v.append(f"row {row}: chunk cursor {req._chunk_pos} "
+                             f"outside [0, {len(req.prompt)})")
+                continue
             lo = len(req.prompt)
             hi = lo + max(len(req.tokens) - 1, 0)
             if not (lo <= int(self.pos[row]) <= hi):
@@ -957,9 +1154,11 @@ class PagedEngine:
         ev = self._apply_faults_pre()
         self._process_lifecycle()
         self._drain_queue()
-        active = [r for r, req in enumerate(self.row_req) if req is not None]
+        self._advance_prefills()
+        active = [r for r, req in enumerate(self.row_req)
+                  if req is not None and req.status is Status.RUNNING]
         if not active:
-            if self.queue:
+            if self.queue or any(req is not None for req in self.row_req):
                 # Everything queued is gated on preemption backoff or on
                 # fault-held pages: tick time forward so the gates expire.
                 self.step_count += 1
@@ -1009,6 +1208,11 @@ class PagedEngine:
                 self.next_tok[row] = expect
                 if not req._replay:
                     req._replay = None
+                    # Replay has drained: if the recorded stream was
+                    # already terminal (EOS / max_new reached before the
+                    # preemption), finish NOW — decoding one more step
+                    # would record past the terminal state.
+                    self._maybe_finish(row, expect)
                 continue
             req._replay = None
             req.tokens.append(int(nxt[row]))

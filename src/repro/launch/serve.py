@@ -20,6 +20,14 @@ decode loop) instead of silently falling back to XLA.  ``--json`` emits
 the whole report as one JSON object on stdout so CI parses it instead of
 grepping log lines.
 
+``--prefill-chunk`` / ``--prefill-budget`` engage the chunked-prefill
+token-budget scheduler: prompts prefill in page-aligned chunks and every
+engine step spends at most the budget in prompt tokens, so decode latency
+under an arrival burst is bounded by the budget, not the longest prompt.
+The report splits prefill accounting into ``prefill_calls`` (logical
+admissions), ``prefill_chunks`` (ragged launches) and ``prefill_tokens``
+(real, unpadded).
+
 Failure handling (see the ``launch/engine.py`` module docstring for the
 full request state machine): the loop installs the
 :mod:`repro.runtime.preemption` SIGTERM/SIGUSR1 handlers and polls
@@ -75,7 +83,9 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
           max_len: int | None = None, page_size: int = 16,
           eos_id: int | None = None, batch_size: int | None = None,
           prefix_len: int = 0, deadline_s: float | None = None,
-          audit_every: int = 0, preempt_after_step: int | None = None):
+          audit_every: int = 0, preempt_after_step: int | None = None,
+          prefill_chunk: int | None = None,
+          prefill_budget: int | None = None):
     """prompts: (B, S) int32 (or a list of ragged 1-D prompts) ->
     (generated (B, gen_tokens) int32, stats).
 
@@ -93,6 +103,13 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
     carry ``preempted: True``.  ``preempt_after_step`` trips the same
     path from inside the loop at a fixed step (deterministic
     graceful-shutdown testing without racing a real signal).
+
+    ``prefill_chunk`` / ``prefill_budget`` engage the chunked-prefill
+    token-budget scheduler (engine module docstring): prompts prefill in
+    page-aligned chunks and each engine step spends at most
+    ``prefill_budget`` prompt tokens on prefill, so a burst of arrivals
+    never stalls running decodes for a whole prompt.  The cut plan is
+    canonical — chunking changes WHEN chunks launch, never the tokens.
     """
     if hasattr(prompts, "shape"):
         prompts = [np.asarray(prompts[i], np.int32)
@@ -100,6 +117,11 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
     lens = [len(p) for p in prompts]
     max_len = max_len or (max(lens) + gen_tokens)
     bucket = max(lens)
+    buckets = {bucket}
+    if prefill_chunk is not None or prefill_budget is not None:
+        # a bucket sized to the chunk keeps chunk launches unpadded
+        c = prefill_chunk if prefill_chunk is not None else prefill_budget
+        buckets.add(max(page_size, min(c, bucket) // page_size * page_size))
     reqs = [Request(rid=i, prompt=p, max_new_tokens=gen_tokens,
                     eos_id=eos_id, prefix_len=prefix_len,
                     deadline_s=deadline_s)
@@ -108,7 +130,9 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
     t0 = time.perf_counter()
     engine = PagedEngine(cfg, params, batch_size=batch_size or len(reqs),
                          max_len=max_len, page_size=page_size,
-                         prefill_buckets=(bucket,),
+                         prefill_buckets=tuple(sorted(buckets)),
+                         prefill_chunk=prefill_chunk,
+                         prefill_budget=prefill_budget,
                          audit_every=audit_every, audit_raises=False)
     for r in reqs:
         engine.submit(r)
@@ -144,6 +168,8 @@ def serve(cfg: lm.LMConfig, params, prompts, *, gen_tokens: int = 16,
                      "error": r.error} for r in reqs],
         "engine_steps": engine.step_count,
         "prefill_calls": engine.prefill_calls,
+        "prefill_chunks": engine.prefill_chunks,
+        "prefill_tokens": engine.prefill_tokens,
         "prefix_prefills": engine.prefix_prefills,
         "shared_prefix_hits": engine.shared_prefix_hits,
         "registered_prefixes": len(engine.prefix_registry),
@@ -183,6 +209,15 @@ def main(argv=None):
                          "requests")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill prompts in page-aligned chunks of this "
+                         "many tokens (chunked-prefill scheduler; default: "
+                         "derived from --prefill-budget when set)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens prefilled per engine step "
+                         "(vLLM/Sarathi-style token budget: an arrival "
+                         "burst never stalls decode for a whole prompt; "
+                         "floor of one chunk per step)")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="expire requests still queued after this many "
                          "wall seconds (TIMED_OUT, never stalls decode)")
@@ -230,7 +265,9 @@ def main(argv=None):
                             prefix_len=args.shared_prefix,
                             deadline_s=args.deadline_s,
                             audit_every=args.audit_every,
-                            preempt_after_step=args.preempt_after_step)
+                            preempt_after_step=args.preempt_after_step,
+                            prefill_chunk=args.prefill_chunk,
+                            prefill_budget=args.prefill_budget)
     finally:
         preemption.reset()
     if args.json:
@@ -244,7 +281,9 @@ def main(argv=None):
               f"{stats['tok_per_s']:.1f} tok/s  "
               f"steps {stats['engine_steps']}  "
               f"prefills {stats['prefill_calls']}  "
-              f"(prefix {stats['prefix_prefills']}, "
+              f"(chunks {stats['prefill_chunks']}, "
+              f"tokens {stats['prefill_tokens']}, "
+              f"prefix {stats['prefix_prefills']}, "
               f"hits {stats['shared_prefix_hits']})  "
               f"rejected {stats['rejected']}{flag}")
         for s in stats["per_seq"]:

@@ -912,6 +912,16 @@ def admission_prefill(params, batch, cfg: LMConfig, cache, rows, page_table,
     prefix tokens, which is what makes a shared prefix bit-identical to a
     privately prefilled one.  Returns (last-real-position logits (W, 1, V),
     updated cache).
+
+    The same mechanics make prefill RESUMABLE in fixed-token chunks (the
+    engine's chunked-prefill scheduler): chunk i+1 is this call with
+    ``prefix_len`` = chunk i's end offset, attending everything already
+    written through its stored codes and per-physical-page scale grids.
+    With page-aligned chunk boundaries each physical page's scale grid is
+    registered by exactly one chunk (the one containing its first token),
+    so the stored codes — and every token decoded from them — are a pure
+    function of the cut plan, independent of launch step or batching
+    width.
     """
     w = batch["tokens"].shape[0]
     view = _admission_view(cache, w, page_table)

@@ -17,7 +17,10 @@ interleavings.
 The suite runs ``-m chaos`` (a hypothesis-driven variant engages when
 hypothesis is installed; the seeded fallback below always runs the
 acceptance count of >= 200 sequences) with one representative case in the
-``-m smoke`` subset.
+``-m smoke`` subset.  A second world runs the same op grammar over the
+chunked-prefill scheduler (8-token chunks, 8-token/step budget), so
+cancels, preemptions and faults land BETWEEN prefill chunks — a
+mid-prefill victim must restart from chunk 0 bit-exactly.
 
 Jit economics: every sequence uses a fresh engine (fresh pool + registry)
 but SHARES the template engine's jitted decode / prefill / XLA-twin
@@ -51,23 +54,37 @@ ENGINE_KW = dict(batch_size=2, max_len=24, page_size=8,
                  prefill_buckets=(16,), num_pages=6)
 
 
-@pytest.fixture(scope="module")
-def world():
+def _make_world(engine_kw):
     qc = QuantConfig(w_bits=8, a_bits=8, attn_bits=7, mode="int")
     cfg = lm.LMConfig(name="t", n_layers=2, d_model=48, n_heads=4,
                       kv_heads=2, d_ff=96, vocab=64, dtype="float32",
                       q_chunk=16, remat=False, quant=qc)
     params = integerize_params(
         lm.init_params(jax.random.PRNGKey(0), cfg.replace(quant=None)), qc)
-    template = PagedEngine(cfg, params, **ENGINE_KW)
+    template = PagedEngine(cfg, params, **engine_kw)
     template._step_fallback()             # trace the XLA twin once
     return {"cfg": cfg, "params": params, "template": template,
-            "solo": {}}
+            "kw": engine_kw, "solo": {}}
+
+
+@pytest.fixture(scope="module")
+def world():
+    return _make_world(dict(ENGINE_KW))
+
+
+@pytest.fixture(scope="module")
+def chunked_world():
+    """The same tiny pool, but every prompt prefills in 8-token chunks
+    under an 8-token/step budget: PROMPT_LENS 9 and 14 span two chunks,
+    so every schedule has mid-prefill windows for cancels, preemptions
+    and faults to land in."""
+    return _make_world({**ENGINE_KW, "prefill_chunk": 8,
+                        "prefill_budget": 8})
 
 
 def _engine(world, **kw):
     eng = PagedEngine(world["cfg"], world["params"], audit_every=0,
-                      **{**ENGINE_KW, **kw})
+                      **{**world["kw"], **kw})
     t = world["template"]
     eng._step = t._step                   # shared traces (see docstring)
     eng._admit_prefill = t._admit_prefill
@@ -205,6 +222,44 @@ def test_chaos_seeded_sequences(world):
         resumes += eng.resume_count
     # the schedule space genuinely exercises the recovery machinery
     assert preempts > 0 and resumes > 0
+
+
+@pytest.mark.chaos
+@pytest.mark.smoke
+def test_chaos_chunked_prefill_representative_case(chunked_world):
+    """ISSUE-10 satellite: faults landing BETWEEN prefill chunks — a
+    cancel and a pool-squeezing page steal hit requests still PREFILLING
+    (one 8-token chunk per step), with the audit green after every op,
+    zero leaked pages, and completed streams bit-identical to fault-free
+    chunked solo runs."""
+    ops = [
+        (0, 2, 1),            # submit len-14 (2 chunks), prio 0
+        (3, 0, 0),            # 1 step: chunk 1 in, still PREFILLING
+        (2, 1, 0),            # fault: steal pages mid-prefill
+        (0, 5, 0),            # second len-14 tenant into the squeeze
+        (3, 0, 0),
+        (1, 0, 0),            # cancel request 0 (possibly between chunks)
+        (3, 0, 2),
+        (0, 1, 1),            # len-9 (2 chunks), prio 2: preemption prey
+        (2, 0, 2),            # fault: forced XLA step during chunking
+        (3, 0, 2),
+    ]
+    eng = _run_schedule(chunked_world, ops, seed=0)
+    assert eng.step_count > 0
+    assert eng.prefill_chunks > eng.prefill_calls   # chunking engaged
+
+
+@pytest.mark.chaos
+def test_chaos_chunked_prefill_seeded_sequences(chunked_world):
+    """Seeded chaos over the chunked-prefill scheduler: the same op
+    grammar, but every admission crosses a PREFILLING window, so cancels,
+    preemptions and faults interleave with the budget packer."""
+    preempts = cancelled = 0
+    for seed in range(N_SEQUENCES // 4):
+        eng = _run_schedule(chunked_world, _seeded_ops(seed), seed=seed)
+        preempts += eng.preempt_count
+        cancelled += len(eng.cancelled)
+    assert preempts > 0 and cancelled > 0
 
 
 if HAVE_HYPOTHESIS:

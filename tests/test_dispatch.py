@@ -427,6 +427,21 @@ def test_kernel_bench_json(tmp_path):
         assert pl["pages_recovered"] > 0
         assert pl["steal_latency_ms"] > 0
         assert pl["bit_identical"] is True
+    # Chunked-prefill latency under a burst: the token budget bounds
+    # per-step prefill work, one-shot provably stalls for the whole
+    # burst, and the foreground stream is identical under both
+    # schedulers (chunk scheduling is invisible in the tokens).
+    for a in payload["paged"]["latency"]["analytic"]:
+        assert a["budgeted_max_tokens_per_step"] <= max(a["chunk"],
+                                                        a["budget"])
+        assert a["oneshot_stall_tokens"] >= \
+            a["budgeted_max_tokens_per_step"]
+        assert a["stall_reduction"] >= 1.0
+    for backend in ("xla", "pallas"):
+        lt = payload["paged"]["latency"]["loop"][backend]
+        assert lt["budget_bounded"] is True
+        assert lt["oneshot_stalls_whole_burst"] is True
+        assert lt["fg_bit_identical"] is True
 
 
 @pytest.mark.smoke
@@ -462,3 +477,11 @@ def test_kernel_bench_check_guard(tmp_path):
     bad3.write_text(json.dumps(tampered))
     with pytest.raises(SystemExit):
         kernel_bench.main(["--check", str(bad3)])
+    # ... and the chunked-prefill latency bound
+    tampered = json.loads(good.read_text())
+    tampered["paged"]["latency"]["analytic"][0][
+        "budgeted_max_tokens_per_step"] -= 1
+    bad4 = tmp_path / "tampered_latency.json"
+    bad4.write_text(json.dumps(tampered))
+    with pytest.raises(SystemExit):
+        kernel_bench.main(["--check", str(bad4)])

@@ -197,24 +197,33 @@ def test_burst_admissions_single_prefill_call():
         assert a.tokens == b.tokens, (a.rid, a.tokens, b.tokens)
 
 
-def test_engine_rejects_overlong_prompt_gracefully():
-    """Satellite: a prompt beyond the largest bucket — which can_admit
-    approves, because it fits the page pool — must be rejected with a
-    recorded failure instead of crashing the serve loop, and neighbours
-    keep serving exactly as if it never arrived."""
+def test_engine_admits_overlong_prompt_via_chunking():
+    """Satellite: a prompt beyond the largest bucket — the pre-PR-10
+    rejection case — now COMPLETES through the chunked-prefill path
+    (page-aligned cuts of the largest bucket), and neighbours keep
+    serving exactly as if it never arrived.  A prompt that can NEVER
+    fit the page pool is still rejected with the offending quantity."""
     cfg, params = _setup()
     kw = dict(batch_size=2, max_len=64, page_size=8, prefill_buckets=(16,))
     eng = PagedEngine(cfg, params, **kw)
-    bad = Request(rid=0, prompt=_prompts([40], seed=10)[0], max_new_tokens=3)
+    # 48 tokens = 3x the largest bucket -> three 16-token chunks
+    big = Request(rid=0, prompt=_prompts([48], seed=10)[0], max_new_tokens=3)
     good = Request(rid=1, prompt=_prompts([10], seed=9)[0], max_new_tokens=3)
-    assert eng.can_admit(bad)                 # the pre-PR-4 crash case
-    eng.run([bad, good])
-    assert bad.failed and bad.done and bad.tokens == []
-    assert "bucket" in bad.error
-    assert eng.rejected == [bad]
+    assert eng.can_admit(big)                 # the pre-PR-4 crash case
+    eng.run([big, good])
+    assert big.done and not big.failed and len(big.tokens) == 3
+    assert eng.prefill_chunks == 3 + 1        # big's plan + good's one-shot
+    assert eng.prefill_calls == 2             # still one logical call each
+    assert eng.prefill_tokens == 48 + 10      # real tokens, no pad
     assert not good.failed
     solo = _run_solo(cfg, params, good.prompt, 3, **kw)
     assert good.tokens == solo
+    # never-admittable stays rejected, naming the offending quantity
+    hopeless = Request(rid=2, prompt=_prompts([60], seed=11)[0],
+                       max_new_tokens=8)     # 60 + 8 > max_len 64
+    eng.run([hopeless])
+    assert hopeless.failed and hopeless.status == Status.REJECTED
+    assert "pages" in hopeless.error
 
 
 def test_engine_runs_paged_kernel_under_pallas():
